@@ -1,0 +1,87 @@
+"""§Perf hillclimbing driver: re-lower a cell with a candidate change and
+print the before/after roofline terms.
+
+Run in a FRESH process (needs the 512-device flag):
+  PYTHONPATH=src python -m benchmarks.hillclimb --cell qwen2-72b:train_4k \
+      --change grad_accum_inside
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import pathlib
+
+PEAK, HBM, ICI = 197e12, 819e9, 50e9
+
+CHANGES = {
+    # name -> overrides dict handed to run_cell (ModelConfig fields, plus
+    # "_grad_accum" for the step-builder knob)
+    "baseline": {},
+    "grad_accum_inside": {"_grad_accum": "inside"},
+    "micro8_inside": {"_grad_accum": "inside", "train_microbatches": 8},
+    "micro4_inside": {"_grad_accum": "inside", "train_microbatches": 4},
+    "micro32_inside": {"_grad_accum": "inside", "train_microbatches": 32},
+    "remat_none": {"remat": "none"},
+    "sp": {"_seq_shard": True},
+    "sp_micro1": {"_seq_shard": True, "train_microbatches": 1},
+    "sp_micro2": {"_seq_shard": True, "train_microbatches": 2},
+    "sp_micro4": {"_seq_shard": True, "train_microbatches": 4},
+    "micro1": {"train_microbatches": 1},
+    "micro2": {"train_microbatches": 2},
+    "micro4": {"train_microbatches": 4},
+    "micro8": {"train_microbatches": 8},
+    "remat_dots": {"remat": "dots"},
+    "moe_flat": {"_moe_flat": True},      # MoE dispatch baseline
+    "kv_seq": {"_kv_seq": True},          # decode-cache baseline
+    "decode_ys": {"decode_cache_in_carry": False},
+    "zero3_micro1": {"_zero3": True, "train_microbatches": 1},
+    "zero3_micro2": {"_zero3": True, "train_microbatches": 2},
+    "zero3": {"_zero3": True},
+    "decode_tp": {"_decode_tp": True},
+    "row_micro4": {"train_microbatches": 4},
+    "decode_baseline": {"decode_cache_in_carry": False, "_kv_seq": True},
+    "flat_micro4": {"_moe_flat": True, "train_microbatches": 4},
+}
+
+
+def terms(rec):
+    return {
+        "compute_s": rec["flops"] / PEAK,
+        "memory_s": rec["bytes_accessed"] / HBM,
+        "collective_s": rec["collectives"]["total_bytes"] / ICI,
+        "mem_gb": (rec["memory"].get("temp_size_in_bytes", 0)
+                   + rec["memory"].get("argument_size_in_bytes", 0)) / 1e9,
+        "coll_counts": {k: int(v) for k, v in
+                        rec["collectives"]["counts"].items() if v},
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch:shape")
+    ap.add_argument("--change", default="baseline")
+    ap.add_argument("--log", default="benchmarks/artifacts/hillclimb.json")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import run_cell
+    from repro.launch.mesh import make_production_mesh
+
+    arch, shape = args.cell.split(":")
+    mesh = make_production_mesh()
+    rec = run_cell(arch, shape, mesh, "single",
+                   extra_overrides=dict(CHANGES[args.change]))
+    t = terms(rec)
+    out = {"cell": args.cell, "change": args.change, **t,
+           "flops": rec["flops"], "compile_s": rec["compile_s"]}
+    print(json.dumps(out, indent=1))
+
+    log = pathlib.Path(args.log)
+    log.parent.mkdir(parents=True, exist_ok=True)
+    hist = json.loads(log.read_text()) if log.exists() else []
+    hist.append(out)
+    log.write_text(json.dumps(hist, indent=1))
+
+
+if __name__ == "__main__":
+    main()

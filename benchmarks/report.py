@@ -1,0 +1,86 @@
+"""Generate the EXPERIMENTS.md §Dry-run/§Roofline tables from artifacts.
+
+Usage: PYTHONPATH=src python -m benchmarks.report > /tmp/roofline.md
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.roofline import HBM, ICI, PEAK, model_flops_per_device, rooflines
+
+ARTIFACTS = pathlib.Path(__file__).parent / "artifacts"
+
+
+def fmt_s(x: float) -> str:
+    if x < 1e-3:
+        return f"{x * 1e6:.0f}us"
+    if x < 1.0:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def roofline_table(mesh: str) -> str:
+    rows = rooflines(mesh)
+    if not rows:
+        return f"(no artifacts for mesh={mesh})"
+    out = [
+        f"### Mesh: {mesh} "
+        f"({'2x16x16 = 512 chips' if mesh == 'multi' else '16x16 = 256 chips'})",
+        "",
+        "| arch | shape | compute | memory | collective | dominant | "
+        "useful (6ND/HLO) | roofline frac | mem GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.4f} | {r['mem_gb']:.1f} |")
+    return "\n".join(out)
+
+
+def dryrun_table(mesh: str) -> str:
+    path = ARTIFACTS / f"dryrun_{mesh}.json"
+    if not path.exists():
+        return f"(no artifacts for mesh={mesh})"
+    recs = json.loads(path.read_text())
+    out = [
+        f"### Mesh: {mesh} — {len(recs)} cells compiled",
+        "",
+        "| arch | shape | HLO FLOPs/dev | bytes/dev | coll bytes/dev | "
+        "AG / AR / RS / A2A / CP counts | args+temp GB/dev | compile s |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        cb = r["collectives"]["bytes"]
+        cc = r["collectives"]["counts"]
+        counts = "/".join(str(int(cc[k])) for k in
+                          ("all-gather", "all-reduce", "reduce-scatter",
+                           "all-to-all", "collective-permute"))
+        mem = (r["memory"].get("temp_size_in_bytes", 0)
+               + r["memory"].get("argument_size_in_bytes", 0)) / 1e9
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['flops']:.2e} | "
+            f"{r['bytes_accessed']:.2e} | "
+            f"{r['collectives']['total_bytes']:.2e} | {counts} | "
+            f"{mem:.1f} | {r['compile_s']:.0f} |")
+    return "\n".join(out)
+
+
+def main():
+    print("## Dry-run records\n")
+    for mesh in ("single", "multi"):
+        print(dryrun_table(mesh))
+        print()
+    print("## Roofline\n")
+    print(f"Constants: {PEAK / 1e12:.0f} TFLOP/s bf16, {HBM / 1e9:.0f} GB/s "
+          f"HBM, {ICI / 1e9:.0f} GB/s ICI per chip.\n")
+    for mesh in ("single", "multi"):
+        print(roofline_table(mesh))
+        print()
+
+
+if __name__ == "__main__":
+    main()

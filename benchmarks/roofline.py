@@ -1,0 +1,97 @@
+"""Roofline report: per (arch x shape x mesh) terms from the dry-run
+artifacts (benchmarks/artifacts/dryrun_*.json).
+
+Hardware model (TPU v5e target):
+    peak        197e12  bf16 FLOP/s per chip
+    hbm_bw      819e9   B/s per chip
+    ici_bw      50e9    B/s per link (per chip, one direction aggregate)
+
+Terms (seconds, per device — the dry-run records are already per-device):
+    compute    = flops / peak
+    memory     = bytes_accessed / hbm_bw       (HBM-traffic *model*: fusion
+                 boundaries count operands+results; internals stay on-chip;
+                 upper bound within ~2x of true traffic)
+    collective = collective_bytes / ici_bw
+
+MODEL_FLOPS = 6*N*D for training (N = params — active params for MoE,
+D = tokens), 2*N*D for prefill/decode.  The ratio MODEL/HLO flags
+remat/recompute/dispatch waste.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+
+ARTIFACTS = pathlib.Path(__file__).parent / "artifacts"
+
+
+def model_flops_per_device(rec: dict) -> float:
+    from repro.configs import SHAPES
+    shape = SHAPES[rec["shape"]]
+    n = rec["active_params"]
+    if rec["shape"].startswith("train"):
+        tokens = shape.seq_len * shape.global_batch
+        total = 6.0 * n * tokens
+    elif rec["shape"].startswith("prefill"):
+        tokens = shape.seq_len * shape.global_batch
+        total = 2.0 * n * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n * shape.global_batch
+    return total / rec["num_devices"]
+
+
+def rooflines(mesh: str = "single") -> list:
+    path = ARTIFACTS / f"dryrun_{mesh}.json"
+    if not path.exists():
+        return []
+    rows = []
+    for rec in json.loads(path.read_text()):
+        t_comp = rec["flops"] / PEAK
+        t_mem = rec["bytes_accessed"] / HBM
+        t_coll = rec["collectives"]["total_bytes"] / ICI
+        dominant = max(
+            (("compute", t_comp), ("memory", t_mem), ("collective", t_coll)),
+            key=lambda kv: kv[1])[0]
+        mf = model_flops_per_device(rec)
+        bound = max(t_comp, t_mem, t_coll)
+        useful = mf / PEAK
+        rows.append({
+            "name": f"roofline/{mesh}/{rec['arch']}/{rec['shape']}",
+            "arch": rec["arch"],
+            "shape": rec["shape"],
+            "mesh": mesh,
+            "compute_s": t_comp,
+            "memory_s": t_mem,
+            "collective_s": t_coll,
+            "dominant": dominant,
+            "model_flops": mf,
+            "hlo_flops": rec["flops"],
+            "useful_ratio": mf / max(rec["flops"], 1.0),
+            # fraction of ideal (model-flops compute-bound) step time actually
+            # achievable given the dominant term — the score we hillclimb.
+            "roofline_fraction": useful / max(bound, 1e-12),
+            "mem_gb": (rec["memory"].get("temp_size_in_bytes", 0)
+                       + rec["memory"].get("argument_size_in_bytes", 0)) / 1e9,
+            "compile_s": rec["compile_s"],
+        })
+    return rows
+
+
+def run() -> list:
+    return rooflines("single") + rooflines("multi")
+
+
+def main():
+    print("name,compute_s,memory_s,collective_s,dominant,useful_ratio,roofline_fraction")
+    for r in run():
+        print(f"{r['name']},{r['compute_s']:.3f},{r['memory_s']:.3f},"
+              f"{r['collective_s']:.3f},{r['dominant']},"
+              f"{r['useful_ratio']:.3f},{r['roofline_fraction']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

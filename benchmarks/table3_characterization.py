@@ -1,0 +1,40 @@
+"""Paper Table 3: the power/slowdown characterization and the per-level
+energy-per-unit-work it implies (the quantity Algorithm 1 trades off)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.characterization import paper_machine_profile, tpu_v5e_like_profile
+
+
+def run() -> list:
+    rows = []
+    for profile in (paper_machine_profile(), tpu_v5e_like_profile()):
+        pt = profile.power_table
+        for i in range(pt.num_levels):
+            # energy to execute one fa-second of work / one fa-second of ckpt
+            e_work = pt.beta[i] * pt.p_comp[i]
+            e_ckpt = pt.gamma[i] * pt.p_ckpt[i]
+            rows.append({
+                "name": f"table3/{profile.name}/f{pt.freq_ghz[i]:g}",
+                "freq_ghz": float(pt.freq_ghz[i]),
+                "p_comp_w": float(pt.p_comp[i]),
+                "beta": float(pt.beta[i]),
+                "p_ckpt_w": float(pt.p_ckpt[i]),
+                "gamma": float(pt.gamma[i]),
+                "joule_per_fa_second_work": float(e_work),
+                "joule_per_fa_second_ckpt": float(e_ckpt),
+            })
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"{r['name']},{r['joule_per_fa_second_work']:.1f},"
+              f"{r['joule_per_fa_second_ckpt']:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Paper Table 4: the six simulated scenarios — actions + savings per node,
+with the published values for side-by-side comparison."""
+from __future__ import annotations
+
+from repro.core.scenarios import paper_scenarios
+from repro.core.simulator import compare
+
+PUBLISHED = {
+    ("scenario1_short_reexec", 1): (4400.00, 2.23),
+    ("scenario1_short_reexec", 2): (34034.60, 61.44),
+    ("scenario1_short_reexec", 3): (34034.60, 48.40),
+    ("scenario2_long_reexec", 1): (294294.60, 70.64),
+    ("scenario2_long_reexec", 2): (294294.60, 69.81),
+    ("scenario2_long_reexec", 3): (294294.60, 69.00),
+    ("scenario3_freq_behaviour_change", 1): (291346.88, 70.75),
+    ("scenario3_freq_behaviour_change", 2): (291448.88, 69.94),
+    ("scenario3_freq_behaviour_change", 3): (291550.88, 69.15),
+    ("scenario4_short_active_waits", 1): (12032.00, 24.10),
+    ("scenario4_short_active_waits", 2): (9798.90, 18.12),
+    ("scenario4_short_active_waits", 3): (10311.40, 17.71),
+    ("scenario5_short_idle_waits", 1): (56.32, 0.17),
+    ("scenario5_short_idle_waits", 2): (66.32, 0.18),
+    ("scenario5_short_idle_waits", 3): (76.32, 0.18),
+    ("scenario6_no_move_ahead", 1): (312774.60, 74.74),
+    ("scenario6_no_move_ahead", 2): (312774.60, 73.86),
+    ("scenario6_no_move_ahead", 3): (312774.60, 73.00),
+}
+
+
+def run() -> list:
+    rows = []
+    for name, cfg in paper_scenarios().items():
+        table, _, _ = compare(cfg)
+        for r in table:
+            pub_j, pub_pct = PUBLISHED[(name, r.node)]
+            rows.append({
+                "name": f"table4/{name}/n{r.node}",
+                "comp_action": r.comp_action,
+                "comp_min": round(r.comp_phase_min, 2),
+                "wait_action": r.wait_action,
+                "wait_min": round(r.wait_phase_min, 2),
+                "total_min": round(r.total_min, 2),
+                "save_j": round(r.save_j, 1),
+                "save_j_per_s": round(r.save_j_per_s, 2),
+                "save_pct": round(r.save_pct, 2),
+                "published_save_j": pub_j,
+                "published_save_pct": pub_pct,
+                "abs_err_pct": round(abs(r.save_pct - pub_pct), 3),
+            })
+    return rows
+
+
+def main():
+    print("name,save_j,published_save_j,save_pct,published_pct")
+    for r in run():
+        print(f"{r['name']},{r['save_j']},{r['published_save_j']},"
+              f"{r['save_pct']},{r['published_save_pct']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Fleet planning with the energy model: expected savings over failure-time
+distributions, and the energy-optimal checkpoint interval (Young/Daly
+extended with the paper's strategy savings).
+
+Run:  PYTHONPATH=src python examples/checkpoint_planning.py
+"""
+import numpy as np
+
+from repro.core.characterization import paper_machine_profile
+from repro.core.planning import expected_savings, optimal_checkpoint_interval
+
+profile = paper_machine_profile()
+
+print("=" * 74)
+print("1. Expected savings per survivor vs checkpoint interval")
+print("   (failure uniform in the interval; Algorithm 1 on a 512-point grid)")
+print("=" * 74)
+print(f"{'interval':>10} | {'E[saving] kJ':>12} | {'E[saving] %':>11} | "
+      f"{'P(sleep)':>8} | {'P(min-f)':>8}")
+for mins in (5, 15, 30, 60, 120):
+    e = expected_savings(profile, ckpt_interval_s=mins * 60.0, t_down_s=60.0,
+                         t_restart_s=60.0, comp_to_block_s=300.0)
+    print(f"{mins:>8}min | {e.mean_saving_j / 1e3:>12.1f} | "
+          f"{e.mean_saving_pct:>11.1f} | {e.p_sleep:>8.2f} | {e.p_min_freq:>8.2f}")
+
+print()
+print("=" * 74)
+print("2. Energy-optimal checkpoint interval (MTBF 24 h, ckpt 2 min)")
+print("=" * 74)
+best, rows = optimal_checkpoint_interval(profile, mtbf_s=24 * 3600.0,
+                                         t_ckpt_s=120.0)
+young = np.sqrt(2 * 120.0 * 24 * 3600.0)
+print(f"{'interval':>10} | {'overhead W (no strategies)':>26} | "
+      f"{'overhead W (with)':>17}")
+for r in rows[::3]:
+    mark = "  <-- optimum" if r["interval_s"] == best else ""
+    print(f"{r['interval_s'] / 60:>7.1f}min | {r['overhead_w_no_strategy']:>26.2f} | "
+          f"{r['overhead_w_with_strategy']:>17.2f}{mark}")
+no_strat = min(rows, key=lambda r: r["overhead_w_no_strategy"])["interval_s"]
+print(f"\nYoung/Daly (time-domain) interval:        {young / 60:6.1f} min")
+print(f"Energy-optimal WITHOUT strategies:         {no_strat / 60:6.1f} min")
+print(f"Energy-optimal WITH the paper's strategies:{best / 60:7.1f} min")
+print("-> the strategies make failures energetically cheaper, so the optimal"
+      "\n   cadence checkpoints less often than the strategy-less energy"
+      "\n   optimum (and overhead drops ~2x at the optimum).")

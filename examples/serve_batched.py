@@ -1,0 +1,47 @@
+"""Batched serving demo: prefill + decode with a KV cache on the public API,
+for a dense GQA model and an attention-free SSM (O(1)-state decode).
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.launch.steps import make_serve_step
+from repro.models import build_model
+
+
+def serve(arch: str, batch: int = 4, prompt_len: int = 16, gen_len: int = 24):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    serve_step = jax.jit(make_serve_step(model))
+
+    rng = jax.random.PRNGKey(42)
+    prompts = jax.random.randint(rng, (batch, prompt_len), 0, cfg.vocab_size)
+
+    # prefill by teacher-forcing the prompt through decode steps (smoke-scale;
+    # production prefill lowers the full-sequence forward — see dryrun).
+    cache = model.init_cache(batch, prompt_len + gen_len)
+    tok = prompts[:, :1]
+    for t in range(prompt_len):
+        nxt, cache = serve_step(params, cache, prompts[:, t:t + 1], jnp.int32(t))
+    generated = [nxt]
+    t0 = time.perf_counter()
+    for t in range(prompt_len, prompt_len + gen_len - 1):
+        nxt, cache = serve_step(params, cache, generated[-1][:, None], jnp.int32(t))
+        generated.append(nxt)
+    jax.block_until_ready(generated[-1])
+    dt = time.perf_counter() - t0
+    toks = jnp.stack(generated, axis=1)
+    print(f"{arch:>14}: generated {toks.shape} tokens, "
+          f"{batch * (gen_len - 1) / dt:.0f} tok/s (CPU smoke config)")
+    print(f"{'':>16}first sampled row: {list(map(int, toks[0][:12]))}")
+
+
+if __name__ == "__main__":
+    serve("qwen2-72b")       # dense GQA decode path
+    serve("mamba2-370m")     # SSM recurrent decode (no KV growth)
+    serve("mixtral-8x22b")   # MoE decode (dense-weighted experts)

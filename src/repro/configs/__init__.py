@@ -1,0 +1,24 @@
+"""Assigned-architecture configs + shape grid."""
+from repro.configs.registry import (
+    ARCHS,
+    LONG_CONTEXT_ARCHS,
+    SHAPES,
+    ShapeSpec,
+    cell_is_skipped,
+    get_config,
+    get_smoke_config,
+    grid,
+    input_specs,
+)
+
+__all__ = [
+    "ARCHS",
+    "LONG_CONTEXT_ARCHS",
+    "SHAPES",
+    "ShapeSpec",
+    "cell_is_skipped",
+    "get_config",
+    "get_smoke_config",
+    "grid",
+    "input_specs",
+]

@@ -1,0 +1,32 @@
+"""Core: the paper's contribution — energy model, strategy engine, simulator."""
+from repro.core.characterization import (
+    MachineProfile,
+    PowerTable,
+    SleepSpec,
+    paper_machine_profile,
+    paper_power_table,
+    paper_sleep_spec,
+    tpu_v5e_like_profile,
+)
+from repro.core.energy_model import LadderArrays, SleepArrays, WaitAction, WaitMode
+from repro.core.planning import expected_savings, optimal_checkpoint_interval
+from repro.core.strategies import Decision, evaluate_strategies, evaluate_strategies_profile
+
+__all__ = [
+    "MachineProfile",
+    "PowerTable",
+    "SleepSpec",
+    "paper_machine_profile",
+    "paper_power_table",
+    "paper_sleep_spec",
+    "tpu_v5e_like_profile",
+    "LadderArrays",
+    "SleepArrays",
+    "WaitAction",
+    "WaitMode",
+    "Decision",
+    "evaluate_strategies",
+    "evaluate_strategies_profile",
+    "expected_savings",
+    "optimal_checkpoint_interval",
+]

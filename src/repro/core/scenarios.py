@@ -1,0 +1,99 @@
+"""The paper's six experimental scenarios (§4.3, Table 4) as configs.
+
+Scenario inputs are reverse-derived from the published phase durations (the
+paper does not publish the raw simulator inputs).  The derivation uses the
+rendezvous identity validated against every Table-4 row:
+
+    T_failed_i = T_recover + exec_to_rendezvous_i
+    wait_i     = T_failed_i - comp_phase_i(f)
+
+with T_recover = T_down + T_restart + T_reexec (eq. 15).  See
+tests/test_scenarios.py for the row-by-row checks.
+
+Scenario 3 note: the paper modifies the ladder by "decreas[ing] the dissipated
+power by 2 W and increas[ing] the slowdown by one tenth".  Applying
+beta(2.1 GHz) = 1.2 -> 1.3 makes energy/work at 2.1 GHz *worse* than at fa
+(1.3 x 146 > 1.0 x 166), so Algorithm 1 would keep fa, contradicting the
+paper's own reported selection of 2.1 GHz, while beta = 1.1 reproduces both
+the selection and the published comp-phase duration (11.02 min =
+8.02 x 1.1 + 2 x 1.1).  We therefore read "by one tenth" as moving the
+slowdown one tenth toward 1 and document the discrepancy (EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import energy_model as em
+from repro.core.characterization import (
+    MachineProfile,
+    PowerTable,
+    paper_machine_profile,
+)
+from repro.core.simulator import NodeStart, ScenarioConfig
+
+__all__ = ["paper_scenarios", "scenario"]
+
+
+def _scenario3_profile() -> MachineProfile:
+    base = paper_machine_profile()
+    pt = base.power_table
+    table = PowerTable(
+        freq_ghz=pt.freq_ghz,
+        p_comp=np.array([166.0, 146.0, 137.0, 124.0]),   # -2 W off non-max levels
+        beta=np.array([1.0, 1.1, 1.4, 2.0]),             # slowdown moved 0.1 toward 1
+        p_ckpt=pt.p_ckpt,
+        gamma=pt.gamma,
+    )
+    return dataclasses.replace(base, power_table=table)
+
+
+def paper_scenarios() -> dict:
+    """name -> ScenarioConfig for the paper's six scenarios."""
+    short = dict(t_down=60.0, t_restart=60.0, t_reexec=110.0)       # T_recover 230 s
+    long = dict(t_down=60.0, t_restart=60.0, t_reexec=1920.0)       # T_recover 2040 s
+    tiny = dict(t_down=60.0, t_restart=39.8, t_reexec=60.0)         # T_recover 159.8 s
+
+    s1 = ScenarioConfig(
+        name="scenario1_short_reexec",
+        survivors=(
+            NodeStart(exec_to_rendezvous=972.0, ckpt_age=600.0),
+            NodeStart(exec_to_rendezvous=103.8, ckpt_age=60.0),
+            NodeStart(exec_to_rendezvous=193.8, ckpt_age=60.0),
+        ),
+        ckpt_interval=1800.0,
+        **short,
+    )
+    s2 = ScenarioConfig(
+        name="scenario2_long_reexec",
+        survivors=(
+            NodeStart(exec_to_rendezvous=481.2, ckpt_age=1500.0),
+            NodeStart(exec_to_rendezvous=511.2, ckpt_age=1500.0),
+            NodeStart(exec_to_rendezvous=541.2, ckpt_age=1500.0),
+        ),
+        ckpt_interval=3600.0,
+        move_ahead_frac=0.5,
+        **long,
+    )
+    s3 = dataclasses.replace(s2, name="scenario3_freq_behaviour_change",
+                             profile=_scenario3_profile())
+    s4 = ScenarioConfig(
+        name="scenario4_short_active_waits",
+        survivors=(
+            NodeStart(exec_to_rendezvous=141.0, ckpt_age=60.0),
+            NodeStart(exec_to_rendezvous=166.0, ckpt_age=60.0),
+            NodeStart(exec_to_rendezvous=191.0, ckpt_age=60.0),
+        ),
+        ckpt_interval=3600.0,
+        **tiny,
+    )
+    s5 = dataclasses.replace(s4, name="scenario5_short_idle_waits",
+                             wait_mode=em.WaitMode.IDLE)
+    s6 = dataclasses.replace(s2, name="scenario6_no_move_ahead", move_ahead=False)
+    return {c.name: c for c in (s1, s2, s3, s4, s5, s6)}
+
+
+def scenario(index: int) -> ScenarioConfig:
+    """Scenario by paper number (1-6)."""
+    return list(paper_scenarios().values())[index - 1]

@@ -1,0 +1,503 @@
+"""Event-driven fault-tolerance / energy simulator (paper §4.1).
+
+Simulates the failure of one node of a message-passing application that uses
+uncoordinated (node-level) checkpointing.  One representative process per
+node (as in the paper's first simulator version).  The surviving processes
+keep executing until each blocks on a rendezvous with the recovering process;
+at failure time the runtime evaluates Algorithm 1 (``repro.core.strategies``,
+the jitted JAX engine) for every survivor and applies the selected compute
+frequency and wait action.
+
+Execution model
+---------------
+* progress is measured in "fa-seconds" (work units normalized to the maximum
+  frequency); executing at ladder level ``l`` advances progress at rate
+  ``1/beta[l]``;
+* each survivor ``i`` rendezvouses with the failed process at progress points
+  ``exec_to_rendezvous_i + k * rendezvous_period_i`` (blocking synchronous
+  semantics, MPI_Ssend/MPI_Recv);
+* checkpoints are timer-triggered (transparent, system-level) every
+  ``ckpt_interval`` wall seconds per process, and take ``t_ckpt * gamma[l]``
+  wall seconds at level ``l``;
+* checkpoint move-ahead (paper §4.1): if a process is about to block and its
+  last checkpoint is older than ``move_ahead_frac * ckpt_interval``, it
+  checkpoints (at its current compute level) before entering the wait;
+* the failed process: down -> restart -> re-execute (at fa, message replay
+  not modeled per the paper) -> continue; it serves each survivor's
+  rendezvous as it reaches the shared progress point;
+* the *intervention interval* of node ``i`` is [failure, rendezvous_i
+  completes]; energies are integrated over that window and compared between
+  a reference run (case B: no intervention) and an intervened run.
+
+The event engine is a heap-based discrete-event scheduler; energy accounting
+is exact piecewise-constant power integration.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import heapq
+import math
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core import energy_model as em
+from repro.core import strategies
+from repro.core.characterization import MachineProfile, paper_machine_profile
+
+__all__ = [
+    "NodeStart",
+    "ScenarioConfig",
+    "Segment",
+    "NodeOutcome",
+    "SimResult",
+    "ComparisonRow",
+    "simulate",
+    "compare",
+]
+
+
+class Phase(enum.Enum):
+    EXEC = "exec"
+    CKPT = "ckpt"
+    WAIT_ACTIVE = "wait_active"
+    WAIT_IDLE = "wait_idle"
+    GO_SLEEP = "go_sleep"
+    SLEEP = "sleep"
+    WAKEUP = "wakeup"
+    DOWN = "down"
+    RESTART = "restart"
+    REEXEC = "reexec"
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeStart:
+    """Pre-failure state of a surviving node at the failure instant (t=0).
+
+    ``peer`` extends the paper (its simulator v1 "does not evaluate processes
+    that indirectly block"): 0 = rendezvous with the failed process; i > 0 =
+    rendezvous with survivor i (who is itself blocked), forming a blocking
+    chain.  The shared progress point must lie after the peer's own block
+    (exec_to_rendezvous > peer's exec_to_rendezvous) and peers must precede
+    their children in the survivors tuple.
+    """
+
+    exec_to_rendezvous: float      # fa-seconds of work until the next rendezvous
+    rendezvous_period: float = 3600.0
+    ckpt_age: float = 60.0         # wall seconds since last checkpoint end
+    peer: int = 0                  # 0 = the failed process; i>0 = survivor i
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioConfig:
+    name: str
+    survivors: tuple
+    t_down: float
+    t_restart: float
+    t_reexec: float
+    profile: MachineProfile = dataclasses.field(default_factory=paper_machine_profile)
+    ckpt_interval: float = 3600.0
+    ckpt_duration: float = 120.0
+    wait_mode: em.WaitMode = em.WaitMode.ACTIVE
+    move_ahead: bool = True
+    move_ahead_frac: float = 0.5
+    mu1: float = 6.0
+    mu2: float = 1.0
+
+    @property
+    def t_recover(self) -> float:
+        return self.t_down + self.t_restart + self.t_reexec
+
+
+@dataclasses.dataclass
+class Segment:
+    node: int
+    t0: float
+    t1: float
+    phase: Phase
+    power: float
+    level: int = 0
+
+    @property
+    def energy(self) -> float:
+        return (self.t1 - self.t0) * self.power
+
+    @property
+    def duration(self) -> float:
+        return self.t1 - self.t0
+
+
+@dataclasses.dataclass
+class NodeOutcome:
+    node: int
+    level: int                 # compute-phase ladder level applied
+    freq_ghz: float
+    wait_action: em.WaitAction
+    comp_phase: float          # duration incl. move-ahead checkpoint (s)
+    wait_phase: float          # duration (s)
+    window: float              # intervention interval duration TT (s)
+    energy: float              # joules over the window
+    predicted_saving: float    # Algorithm-1 prediction at decision time (J)
+
+
+@dataclasses.dataclass
+class SimResult:
+    config: ScenarioConfig
+    intervene: bool
+    segments: list
+    outcomes: dict             # node -> NodeOutcome
+
+    def node_segments(self, node: int):
+        return [s for s in self.segments if s.node == node]
+
+
+@dataclasses.dataclass
+class ComparisonRow:
+    """One Table-4 row."""
+
+    node: int
+    comp_action: str
+    comp_phase_min: float
+    wait_action: str
+    wait_phase_min: float
+    total_min: float
+    save_j: float
+    save_j_per_s: float
+    save_pct: float
+
+
+# ---------------------------------------------------------------------------
+# event engine
+# ---------------------------------------------------------------------------
+
+_FAILED = 0  # the failed node id; survivors are 1..N
+
+
+class _Proc:
+    def __init__(self, node: int):
+        self.node = node
+        self.progress = 0.0          # fa-seconds of completed work
+        self.level = 0               # ladder level while executing
+        self.t_last = 0.0            # time of last progress update
+        self.phase: Optional[Phase] = None
+        self.last_ckpt_end = 0.0
+        self.rendezvous_target = math.inf
+        self.wait_action = em.WaitAction.NONE
+        self.window_end: Optional[float] = None
+        self.seq = 0                 # event-generation counter (stale-event guard)
+
+
+def _power(profile: MachineProfile, phase: Phase, level: int, wait_level: int,
+           wait_mode: em.WaitMode) -> float:
+    pt = profile.power_table
+    if phase == Phase.EXEC:
+        return float(pt.p_comp[level])
+    if phase == Phase.CKPT:
+        return float(pt.p_ckpt[level])
+    if phase == Phase.WAIT_ACTIVE:
+        return float(pt.p_comp[wait_level])
+    if phase == Phase.WAIT_IDLE:
+        return float(profile.p_idle_wait)
+    if phase == Phase.GO_SLEEP:
+        return float(profile.sleep.p_go_sleep)
+    if phase == Phase.SLEEP:
+        return float(profile.sleep.p_sleep)
+    if phase == Phase.WAKEUP:
+        return float(profile.sleep.p_wakeup)
+    if phase == Phase.DOWN:
+        return 0.0
+    if phase == Phase.RESTART:
+        return float(pt.p_ckpt[0])
+    if phase == Phase.REEXEC:
+        return float(pt.p_comp[0])
+    raise ValueError(phase)
+
+
+def simulate(cfg: ScenarioConfig, intervene: bool) -> SimResult:
+    """Run one scenario (reference or intervened)."""
+    profile = cfg.profile
+    pt = profile.power_table
+    n_survivors = len(cfg.survivors)
+    min_level = pt.min_index
+
+    # --- plan + Algorithm 1 decisions at failure time (t=0) ----------------
+    exec_rem = np.array([s.exec_to_rendezvous for s in cfg.survivors])
+    # rendezvous-completion times in chain (topological) order: direct
+    # blockers wait for the recovering process; chained blockers wait for
+    # their (blocked) peer to resume and reach the shared progress point.
+    t_failed = np.zeros(len(cfg.survivors))
+    for i, sv in enumerate(cfg.survivors):
+        if sv.peer == 0:
+            t_failed[i] = cfg.t_recover + exec_rem[i]         # eq (14)/(15)
+        else:
+            j = sv.peer - 1
+            assert j < i, "peers must precede their children in survivors"
+            assert exec_rem[i] > exec_rem[j], (
+                "chained rendezvous must lie after the peer's block point")
+            t_failed[i] = t_failed[j] + (exec_rem[i] - exec_rem[j])
+    ages = np.array([s.ckpt_age for s in cfg.survivors])
+    # Per (node, level) checkpoint plan: timer checkpoints that will fire
+    # during the (stretched) compute phase plus a planned move-ahead at
+    # block time.  Planning at decision time keeps Algorithm 1's feasibility
+    # check and the executed timeline coherent.
+    F = pt.num_levels
+    n_timer = np.zeros((n_survivors, F))
+    for i in range(n_survivors):
+        for l in range(F):
+            beta, gamma = float(pt.beta[l]), float(pt.gamma[l])
+            dur = cfg.ckpt_duration * gamma
+            # timer k fires at wall (interval - age) + k*(interval + dur);
+            # each firing pushes the block time by dur.
+            n = 0
+            t_timer = cfg.ckpt_interval - ages[i]
+            block_wall = exec_rem[i] * beta
+            while t_timer < block_wall - 1e-9:
+                n += 1
+                block_wall += dur
+                t_timer += cfg.ckpt_interval + dur
+            n_timer[i, l] = n
+    # The move-ahead is FT policy, decided once from the un-stretched (fa)
+    # timeline and applied at every candidate level (the paper's Algorithm 1
+    # likewise uses one N_ckpt for all frequencies): levels that cannot fit
+    # exec + checkpoint before T_failed are simply infeasible.
+    wait_at_block_fa = t_failed - (exec_rem + n_timer[:, 0] * cfg.ckpt_duration)
+    # age at block: if a timer checkpoint fired during the compute phase the
+    # age restarts from its end.
+    last_timer_end_offset = np.where(
+        n_timer[:, 0] > 0,
+        (cfg.ckpt_interval - ages)
+        + (n_timer[:, 0] - 1) * (cfg.ckpt_interval + cfg.ckpt_duration)
+        + cfg.ckpt_duration,
+        -ages,
+    )
+    age_at_block_fa = exec_rem + n_timer[:, 0] * cfg.ckpt_duration - last_timer_end_offset
+    plan_move = (
+        cfg.move_ahead
+        & (age_at_block_fa > cfg.move_ahead_frac * cfg.ckpt_interval)
+        & (wait_at_block_fa > cfg.ckpt_duration)
+    )
+    n_ckpt = n_timer + plan_move[:, None].astype(np.float64)
+
+    if intervene:
+        decision = strategies.evaluate_strategies_profile(
+            profile,
+            exec_rem,
+            t_failed,
+            n_ckpt,
+            cfg.ckpt_duration,
+            np.full(n_survivors, int(cfg.wait_mode)),
+            mu1=cfg.mu1,
+            mu2=cfg.mu2,
+            per_level_n_ckpt=True,
+        )
+        levels = np.asarray(decision.level)
+        wait_actions = [em.WaitAction(int(a)) for a in np.asarray(decision.wait_action)]
+        predicted_saving = np.asarray(decision.saving)
+    else:
+        levels = np.zeros(n_survivors, dtype=np.int64)
+        wait_actions = [em.WaitAction.NONE] * n_survivors
+        predicted_saving = np.zeros(n_survivors)
+    node_plan_move = {i + 1: bool(plan_move[i]) for i in range(n_survivors)}
+
+    # --- simulation state ---------------------------------------------------
+    procs = {i: _Proc(i) for i in range(n_survivors + 1)}
+    segments: list = []
+    outcomes: dict = {}
+    heap: list = []
+    counter = 0
+
+    def push(t: float, kind: str, node: int, seq: int):
+        nonlocal counter
+        heapq.heappush(heap, (t, counter, kind, node, seq))
+        counter += 1
+
+    def emit(node: int, t0: float, t1: float, phase: Phase, level: int, wait_level: int = 0):
+        if t1 > t0:
+            segments.append(
+                Segment(node, t0, t1, phase,
+                        _power(profile, phase, level, wait_level, cfg.wait_mode), level)
+            )
+
+    # failed node timeline is fully known up front
+    fp = procs[_FAILED]
+    t_restart_end = cfg.t_down + cfg.t_restart
+    t_rec = cfg.t_recover
+    emit(_FAILED, 0.0, cfg.t_down, Phase.DOWN, 0)
+    emit(_FAILED, cfg.t_down, t_restart_end, Phase.RESTART, 0)
+    emit(_FAILED, t_restart_end, t_rec, Phase.REEXEC, 0)
+    # after recovery the failed proc executes at fa; direct blockers complete
+    # at t_rec + exec_rem[i]; chained blockers complete when their peer
+    # reaches the shared point (t_failed, computed in chain order above).
+    arrival = {i + 1: float(t_failed[i]) for i in range(n_survivors)}
+    fa_end = t_rec + float(np.max(exec_rem)) if n_survivors else t_rec
+    emit(_FAILED, t_rec, fa_end, Phase.EXEC, 0)
+
+    # survivors
+    for i in range(n_survivors):
+        node = i + 1
+        p = procs[node]
+        p.level = int(levels[i])
+        p.wait_action = wait_actions[i]
+        p.rendezvous_target = float(exec_rem[i])
+        p.last_ckpt_end = -float(cfg.survivors[i].ckpt_age)
+        p.phase = Phase.EXEC
+        p.t_last = 0.0
+        _schedule_next(p, cfg, push)
+
+    wait_start: dict = {}
+    comp_end: dict = {}
+
+    def _begin_wait(node: int, t: float):
+        p = procs[node]
+        comp_end[node] = t
+        wait_start[node] = t
+        t_arr = arrival[node]
+        action = p.wait_action
+        if action == em.WaitAction.SLEEP:
+            sl = profile.sleep
+            t_go_end = t + sl.t_go_sleep
+            t_wake_start = max(t_arr - sl.t_wakeup, t_go_end)
+            emit(node, t, t_go_end, Phase.GO_SLEEP, p.level)
+            emit(node, t_go_end, t_wake_start, Phase.SLEEP, p.level)
+            emit(node, t_wake_start, t_arr, Phase.WAKEUP, p.level)
+        elif action == em.WaitAction.MIN_FREQ:
+            emit(node, t, t_arr, Phase.WAIT_ACTIVE, p.level, wait_level=min_level)
+        else:
+            # reference / idle: active waits spin at fa, idle waits block.
+            if cfg.wait_mode == em.WaitMode.ACTIVE:
+                emit(node, t, t_arr, Phase.WAIT_ACTIVE, p.level, wait_level=0)
+            else:
+                emit(node, t, t_arr, Phase.WAIT_IDLE, p.level)
+        push(t_arr, "rendezvous_complete", node, procs[node].seq)
+
+    def _on_block(node: int, t: float):
+        """Survivor reached its rendezvous point: execute the planned
+        move-ahead checkpoint (if any), then enter the wait."""
+        p = procs[node]
+        do_move = node_plan_move[node] and (
+            arrival[node] - t > cfg.ckpt_duration * float(pt.gamma[p.level]) - 1e-9
+        )
+        if do_move:
+            dur = cfg.ckpt_duration * float(pt.gamma[p.level])
+            emit(node, t, t + dur, Phase.CKPT, p.level)
+            p.last_ckpt_end = t + dur
+            _begin_wait(node, t + dur)
+        else:
+            _begin_wait(node, t)
+
+    # --- event loop ---------------------------------------------------------
+    open_windows = set(range(1, n_survivors + 1))
+    while heap and open_windows:
+        t, _, kind, node, seq = heapq.heappop(heap)
+        p = procs[node]
+        if seq != p.seq:
+            continue  # superseded event
+        if kind == "reach_rendezvous":
+            p.progress = p.rendezvous_target
+            emit(node, p.t_last, t, Phase.EXEC, p.level)
+            p.t_last = t
+            p.seq += 1
+            _on_block(node, t)
+        elif kind == "ckpt_timer":
+            # flush exec progress, run the checkpoint, resume
+            beta = float(pt.beta[p.level])
+            p.progress += (t - p.t_last) / beta
+            emit(node, p.t_last, t, Phase.EXEC, p.level)
+            dur = cfg.ckpt_duration * float(pt.gamma[p.level])
+            emit(node, t, t + dur, Phase.CKPT, p.level)
+            p.last_ckpt_end = t + dur
+            p.t_last = t + dur
+            p.seq += 1
+            _schedule_next(p, cfg, push, now=t + dur)
+        elif kind == "rendezvous_complete":
+            p.window_end = t
+            open_windows.discard(node)
+
+    # --- account ------------------------------------------------------------
+    for i in range(n_survivors):
+        node = i + 1
+        end = procs[node].window_end
+        assert end is not None, f"node {node} window never closed"
+        energy = sum(s.energy for s in segments if s.node == node and s.t1 <= end + 1e-9)
+        outcomes[node] = NodeOutcome(
+            node=node,
+            level=int(levels[i]),
+            freq_ghz=float(pt.freq_ghz[int(levels[i])]),
+            wait_action=wait_actions[i],
+            comp_phase=comp_end[node],
+            wait_phase=end - wait_start[node],
+            window=end,
+            energy=energy,
+            predicted_saving=float(predicted_saving[i]),
+        )
+    return SimResult(config=cfg, intervene=intervene, segments=segments, outcomes=outcomes)
+
+
+def _schedule_next(p: _Proc, cfg: ScenarioConfig, push: Callable, now: Optional[float] = None):
+    """Schedule whichever comes first for an executing survivor: the next
+    checkpoint timer or reaching the rendezvous progress point."""
+    from repro.core.characterization import PowerTable  # noqa: F401 (doc aid)
+
+    t_now = p.t_last if now is None else now
+    beta = float(cfg.profile.power_table.beta[p.level])
+    t_reach = t_now + (p.rendezvous_target - p.progress) * beta
+    t_ckpt = p.last_ckpt_end + cfg.ckpt_interval
+    if t_ckpt < t_reach:
+        push(t_ckpt, "ckpt_timer", p.node, p.seq)
+    else:
+        push(t_reach, "reach_rendezvous", p.node, p.seq)
+
+
+# ---------------------------------------------------------------------------
+# comparison (Table 4)
+# ---------------------------------------------------------------------------
+
+_ACTION_LABEL = {
+    em.WaitAction.NONE: "No action",
+    em.WaitAction.MIN_FREQ: "min freq",
+    em.WaitAction.SLEEP: "sleep",
+}
+
+
+def compare(cfg: ScenarioConfig):
+    """Run reference + intervened and produce Table-4-style rows.
+
+    Save(J/s) follows the paper's convention: savings divided by the total
+    duration of the phases in which an action was applied (wait phase only
+    when the compute frequency is unchanged, the whole interval otherwise).
+    """
+    ref = simulate(cfg, intervene=False)
+    act = simulate(cfg, intervene=True)
+    rows = []
+    for node in sorted(act.outcomes):
+        o = act.outcomes[node]
+        r = ref.outcomes[node]
+        save = r.energy - o.energy
+        comp_changed = o.level != 0
+        if comp_changed and o.wait_action != em.WaitAction.NONE:
+            denom = o.window
+        elif comp_changed:
+            denom = o.comp_phase
+        elif o.wait_action != em.WaitAction.NONE:
+            denom = o.wait_phase
+        else:
+            denom = o.window
+        comp_label = f"{o.freq_ghz:g} GHz" if comp_changed else "No action"
+        wait_label = _ACTION_LABEL[o.wait_action]
+        if o.wait_action == em.WaitAction.MIN_FREQ:
+            wait_label = f"{cfg.profile.power_table.freq_ghz[-1]:g} GHz"
+        rows.append(
+            ComparisonRow(
+                node=node,
+                comp_action=comp_label,
+                comp_phase_min=o.comp_phase / 60.0,
+                wait_action=wait_label,
+                wait_phase_min=o.wait_phase / 60.0,
+                total_min=o.window / 60.0,
+                save_j=save,
+                save_j_per_s=save / max(denom, 1e-9),
+                save_pct=100.0 * save / max(r.energy, 1e-9),
+            )
+        )
+    return rows, ref, act

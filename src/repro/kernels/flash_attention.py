@@ -1,0 +1,130 @@
+"""Pallas TPU flash attention (causal, GQA, optional sliding window).
+
+TPU-native design (see DESIGN.md §Hardware-adaptation):
+  * layout (batch, heads, seq, head_dim); MXU-aligned blocks
+    (block_q x block_k = 128 x 128 by default, head_dim up to 256);
+  * grid = (batch*heads, num_q_blocks, num_k_blocks) with the k axis
+    innermost — TPU grids iterate sequentially, so the online-softmax
+    running statistics (m, l) and the output accumulator live in VMEM
+    scratch and persist across the k sweep of each q block;
+  * GQA without materializing repeated KV: the BlockSpec index_map sends
+    query head h to KV head h // group_size;
+  * causal/sliding-window blocks that are fully masked are skipped with
+    pl.when (no MXU work, no HBM traffic beyond the prefetched block).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_bhsd"]
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scratch, l_scratch, acc_scratch,
+            *, block_q: int, block_k: int, seq_k: int, causal: bool,
+            window: Optional[int], q_offset: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scratch[...] = jnp.full_like(m_scratch, NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch)
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    # absolute positions of this (q block, k block)
+    q_start = iq * block_q + q_offset          # queries occupy the suffix
+    k_start = ik * block_k
+
+    # block-level skip: fully-masked blocks do no work
+    needed = True
+    if causal:
+        needed = k_start <= q_start + block_q - 1          # not above diagonal
+        if window is not None:
+            needed = jnp.logical_and(
+                needed, k_start + block_k - 1 > q_start - window
+            )
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                   # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                   # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+            mask = kpos <= qpos
+            if window is not None:
+                mask = jnp.logical_and(mask, kpos > qpos - window)
+            s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scratch[...]                            # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_scratch[...] + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc_scratch[...] * alpha + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_scratch[...] = m_new
+        l_scratch[...] = l_new
+        acc_scratch[...] = acc
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scratch[...], 1e-30)
+        o_ref[0] = (acc_scratch[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(
+    q: jax.Array,       # (BH, Sq, d) — flattened batch*query-heads
+    k: jax.Array,       # (BK, Sk, d) — flattened batch*kv-heads
+    v: jax.Array,
+    *,
+    group: int,         # query heads per kv head
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Core pallas_call.  Softmax scale must be pre-applied to q."""
+    bh, sq, d = q.shape
+    _, sk, _ = k.shape
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    grid = (bh, sq // block_q, sk // block_k)
+    q_offset = sk - sq if causal else 0   # queries are the suffix (prefill/train: sq==sk)
+
+    kernel = functools.partial(
+        _kernel, block_q=block_q, block_k=block_k, seq_k=sk, causal=causal,
+        window=window, q_offset=q_offset,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, iq, ik: (b, iq, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, iq, ik, g=group: (b // g, ik, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, iq, ik, g=group: (b // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, iq, ik: (b, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running denom
+            pltpu.VMEM((block_q, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

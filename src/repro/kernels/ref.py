@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the Pallas kernels (shape-for-shape references)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention_ref", "ssd_scan_ref"]
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        sliding_window: Optional[int] = None) -> jax.Array:
+    """Oracle over the model-layout tensors: q (B,S,H,hd), k/v (B,T,K,hd)."""
+    from repro.models.attention import gqa_scores_reference
+
+    return gqa_scores_reference(q, k, v, causal=causal,
+                                sliding_window=sliding_window)
+
+
+def ssd_scan_ref(x: jax.Array, dt: jax.Array, a: jax.Array, bmat: jax.Array,
+                 cmat: jax.Array, *, chunk: int):
+    """Oracle over the model-layout tensors:
+    x (b,s,h,p), dt (b,s,h), a (h,), B/C (b,s,g,n)."""
+    from repro.models.ssm import ssd_reference
+
+    return ssd_reference(x, dt, a, bmat, cmat, chunk)

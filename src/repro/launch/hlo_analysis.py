@@ -1,0 +1,293 @@
+"""Trip-count-aware cost extraction from optimized (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts every ``while`` body exactly once,
+which silently drops the x num_layers (scan), x microbatches and x chunk
+factors — useless for a roofline.  This module walks the HLO computation
+graph, multiplies loop bodies by their parsed trip counts, and produces the
+three per-device roofline inputs:
+
+  * flops             — 2 * M*N*K for every dot (MXU work)
+  * bytes             — operand+result bytes of every primitive/fusion at
+                        computation scope (an HBM-traffic model: fusion
+                        internals stay on-chip)
+  * collective bytes  — result bytes per collective kind
+
+Trip counts are parsed from each while's condition computation (the
+``compare(iv, constant)`` limit).  Costs are memoized per computation and
+multiplied up the call tree (while -> trip x body; fusion/call -> flops of
+the called computation but bytes only at the call site).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["analyze_hlo", "HloCost"]
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+    "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
+_INSTR_HEAD = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+# first lowercase word directly followed by '(' after the type region is the
+# op name (type strings contain no `word(` tokens; /*index=N*/ comments do
+# contain '=' so the type cannot be matched with a no-'=' regex).
+_OP_AT = re.compile(r"(?:^|\s)([a-z][\w\-]*)\(")
+_SHAPE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_CONST_INT = re.compile(r"s(?:32|64)\[\]\s+constant\((\d+)\)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE.finditer(type_str):
+        dt, dims = m.groups()
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE.search(type_str)
+    if not m:
+        return None
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",") if d]
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: dict.fromkeys(COLLECTIVES, 0.0))
+    collective_counts: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: dict.fromkeys(COLLECTIVES, 0.0))
+
+    def add(self, other: "HloCost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k in COLLECTIVES:
+            self.collective_bytes[k] += other.collective_bytes[k] * mult
+            self.collective_counts[k] += other.collective_counts[k] * mult
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str
+
+
+def _split_computations(text: str) -> Dict[str, Tuple[List[_Instr], bool]]:
+    comps: Dict[str, Tuple[List[_Instr], bool]] = {}
+    cur: Optional[str] = None
+    cur_instrs: List[_Instr] = []
+    is_entry = False
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HEADER.match(line.strip()) if line.strip().endswith("{") else None
+            if m and ("->" in line):
+                cur = m.group(2)
+                is_entry = bool(m.group(1))
+                cur_instrs = []
+            continue
+        if line.strip() == "}":
+            comps[cur] = (cur_instrs, is_entry)
+            cur = None
+            continue
+        m = _INSTR_HEAD.match(line)
+        if m:
+            name, rhs = m.groups()
+            mo = _OP_AT.search(rhs)
+            if mo:
+                type_str = rhs[: mo.start()]
+                op = mo.group(1)
+                rest = rhs[mo.end():]
+                cur_instrs.append(_Instr(name, type_str, op, rest))
+    return comps
+
+
+def _dot_flops(instr: _Instr, symtab: Dict[str, str]) -> float:
+    """2 * result_elems * contracted_elems for a dot."""
+    res = _shape_dims(instr.type_str)
+    if res is None:
+        return 0.0
+    _, rdims = res
+    result_elems = 1
+    for d in rdims:
+        result_elems *= d
+    # contraction size from lhs operand shape + contracting dims
+    ops = re.findall(r"%([\w\.\-]+)", instr.rest.split(")")[0])
+    mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.rest)
+    if not ops or mc is None:
+        return 2.0 * result_elems  # degenerate
+    lhs_type = symtab.get(ops[0], "")
+    lhs = _shape_dims(lhs_type)
+    if lhs is None:
+        return 2.0 * result_elems
+    _, ldims = lhs
+    contract = 1
+    for idx in mc.group(1).split(","):
+        if idx and int(idx) < len(ldims):
+            contract *= ldims[int(idx)]
+    return 2.0 * result_elems * contract
+
+
+def _called_names(rest: str) -> List[str]:
+    names = []
+    for key in ("calls=", "body=", "condition=", "to_apply="):
+        m = re.search(re.escape(key) + r"%?([\w\.\-]+)", rest)
+        if m:
+            names.append(m.group(1))
+    return names
+
+
+def _operand_bytes(instr: _Instr, symtab: Dict[str, str]) -> float:
+    ops = re.findall(r"%([\w\.\-]+)", instr.rest.split("),")[0])
+    return float(sum(_shape_bytes(symtab.get(o, "")) for o in ops))
+
+
+_NO_TRAFFIC = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+               "after-all", "partition-id", "replica-id", "iota",
+               "opt-barrier", "custom-call"}
+
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_EXPL = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _group_size(rest: str) -> int:
+    m = _GROUPS_IOTA.search(rest)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_EXPL.search(rest)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 2  # unknown: neutral-ish
+
+
+def _wire_bytes(kind: str, result_bytes: float, k: int) -> float:
+    """Per-device ICI wire bytes under a ring schedule with group size k.
+
+    all-gather     result is the gathered tensor: (k-1)/k x result
+    reduce-scatter result is the shard: input = k x result, wire (k-1) x result
+    all-reduce     RS + AG on the (unsharded) payload: 2 (k-1)/k x result
+    all-to-all     (k-1)/k x result
+    collective-permute  one hop: result
+    """
+    if k <= 1:
+        return 0.0
+    f = (k - 1) / k
+    if kind == "all-gather":
+        return f * result_bytes
+    if kind == "reduce-scatter":
+        return (k - 1) * result_bytes
+    if kind == "all-reduce":
+        return 2.0 * f * result_bytes
+    if kind == "all-to-all":
+        return f * result_bytes
+    return result_bytes
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps = _split_computations(text)
+    memo: Dict[str, HloCost] = {}
+
+    def trip_count(cond_name: str) -> float:
+        instrs, _ = comps.get(cond_name, ([], False))
+        best = 1
+        for i in instrs:
+            for m in _CONST_INT.finditer(f"{i.type_str} {i.op}({i.rest}"):
+                best = max(best, int(m.group(1)))
+        return float(best)
+
+    def cost_of(name: str) -> HloCost:
+        if name in memo:
+            return memo[name]
+        memo[name] = HloCost()  # cycle guard
+        instrs, _ = comps.get(name, ([], False))
+        symtab = {i.name: i.type_str for i in instrs}
+        c = HloCost()
+        for i in instrs:
+            if i.op == "while":
+                body, cond = None, None
+                mb = re.search(r"body=%?([\w\.\-]+)", i.rest)
+                mcnd = re.search(r"condition=%?([\w\.\-]+)", i.rest)
+                if mb:
+                    c.add(cost_of(mb.group(1)), mult=trip_count(mcnd.group(1)) if mcnd else 1.0)
+                continue
+            if i.op == "dot":
+                c.flops += _dot_flops(i, symtab)
+                c.bytes += _shape_bytes(i.type_str) + _operand_bytes(i, symtab)
+                continue
+            if i.op in ("fusion", "call"):
+                for sub in _called_names(i.rest):
+                    sc = cost_of(sub)
+                    c.flops += sc.flops            # inner dots count
+                    for k in COLLECTIVES:          # collectives inside fusions
+                        c.collective_bytes[k] += sc.collective_bytes[k]
+                        c.collective_counts[k] += sc.collective_counts[k]
+                # TPU traffic model: a fused computation writes its result to
+                # HBM; its operand reads are accounted for at their producers
+                # (CPU XLA's tiny kLoop fusions would otherwise double-count
+                # every elementwise edge).
+                c.bytes += _shape_bytes(i.type_str)
+                continue
+            if i.op in ("conditional",):
+                for sub in re.findall(r"(?:true_computation|false_computation|branch_computations)=\{?%?([\w\.\-]+)", i.rest):
+                    c.add(cost_of(sub))
+                continue
+            if i.op.endswith("-done"):
+                continue  # traffic counted at the matching -start
+            kind = next((k for k in COLLECTIVES if i.op.startswith(k)), None)
+            if kind is not None:
+                b = _shape_bytes(i.type_str)
+                c.collective_bytes[kind] += _wire_bytes(kind, b, _group_size(i.rest))
+                c.collective_counts[kind] += 1
+                c.bytes += b + _operand_bytes(i, symtab)
+                continue
+            if i.op in _NO_TRAFFIC:
+                continue
+            if i.op == "dynamic-slice":
+                # reads + writes only the slice (result-sized)
+                c.bytes += 2.0 * _shape_bytes(i.type_str)
+                continue
+            if i.op in ("dynamic-update-slice", "scatter"):
+                # in-place on hardware (donation/aliasing): traffic is the
+                # update payload, not the full target buffer
+                ops = re.findall(r"%([\w\.\-]+)", i.rest.split("),")[0])
+                upd = _shape_bytes(symtab.get(ops[1], "")) if len(ops) > 1 else 0
+                c.bytes += 2.0 * upd
+                continue
+            # generic primitive: traffic = operands + result
+            c.bytes += _shape_bytes(i.type_str) + _operand_bytes(i, symtab)
+        memo[name] = c
+        return c
+
+    entry = None
+    for nm, (_, is_entry) in comps.items():
+        if is_entry:
+            entry = nm
+            break
+    if entry is None:
+        return HloCost()
+    # memoized costs: reset the cycle-guard zero entries by recomputing entry
+    memo.pop(entry, None)
+    return cost_of(entry)

@@ -1,0 +1,62 @@
+"""Serving driver CLI: batched decode on the smoke configs (CPU) or
+production-mesh lowering of prefill/decode steps (dry-run path).
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.serve --arch mamba2-370m --gen 32
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-72b \
+      --production-lower --shape decode_32k
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-370m")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--production-lower", action="store_true")
+    ap.add_argument("--shape", default="decode_32k")
+    args = ap.parse_args()
+
+    if args.production_lower:
+        import subprocess
+        import sys
+        raise SystemExit(subprocess.call(
+            [sys.executable, "-m", "repro.launch.dryrun",
+             "--arch", args.arch, "--shape", args.shape]))
+
+    from repro.configs import get_smoke_config
+    from repro.launch.steps import make_serve_step
+    from repro.models import build_model
+
+    cfg = get_smoke_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    serve_step = jax.jit(make_serve_step(model))
+    rng = jax.random.PRNGKey(1)
+    prompts = jax.random.randint(rng, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    cache = model.init_cache(args.batch, args.prompt_len + args.gen)
+    tok = None
+    for t in range(args.prompt_len):
+        tok, cache = serve_step(params, cache, prompts[:, t:t + 1], jnp.int32(t))
+    out = [tok]
+    t0 = time.perf_counter()
+    for t in range(args.prompt_len, args.prompt_len + args.gen - 1):
+        tok, cache = serve_step(params, cache, out[-1][:, None], jnp.int32(t))
+        out.append(tok)
+    jax.block_until_ready(out[-1])
+    dt = time.perf_counter() - t0
+    print(f"{args.arch}: {args.batch}x{args.gen} tokens, "
+          f"{args.batch * (args.gen - 1) / dt:.0f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

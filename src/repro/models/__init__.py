@@ -1,0 +1,19 @@
+"""Pure-JAX model zoo: dense/MoE/SSM/hybrid decoders + encoder-decoder."""
+from repro.models.api import (
+    EncDecConfig,
+    HybridConfig,
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+)
+from repro.models.transformer import Model, build_model
+
+__all__ = [
+    "EncDecConfig",
+    "HybridConfig",
+    "ModelConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "Model",
+    "build_model",
+]

@@ -1,0 +1,210 @@
+"""GQA attention (with optional QKV bias, sliding window, M-RoPE) plus the
+decode path over a KV cache.  The training/prefill inner loop dispatches to
+the Pallas flash-attention kernel when ``cfg.use_flash_kernel`` (falling back
+to the fused-einsum reference, which is also the kernel's oracle)."""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.api import ModelConfig
+
+__all__ = ["AttnParams", "init_attn", "attention", "decode_attention", "init_kv_cache"]
+
+
+def init_attn(rng, d_model: int, num_heads: int, num_kv_heads: int, head_dim: int,
+              qkv_bias: bool, dtype) -> dict:
+    kq, kk, kv, ko = jax.random.split(rng, 4)
+    scale = d_model ** -0.5
+    p = {
+        "wq": (jax.random.normal(kq, (d_model, num_heads * head_dim)) * scale).astype(dtype),
+        "wk": (jax.random.normal(kk, (d_model, num_kv_heads * head_dim)) * scale).astype(dtype),
+        "wv": (jax.random.normal(kv, (d_model, num_kv_heads * head_dim)) * scale).astype(dtype),
+        "wo": (jax.random.normal(ko, (num_heads * head_dim, d_model)) * scale).astype(dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((num_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+    return p
+
+
+def _project_qkv(p: dict, x: jax.Array, cfg: ModelConfig,
+                 num_heads: int, num_kv_heads: int):
+    hd = cfg.resolved_head_dim
+    b, s, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, num_heads, hd)
+    k = k.reshape(b, s, num_kv_heads, hd)
+    v = v.reshape(b, s, num_kv_heads, hd)
+    return q, k, v
+
+
+def _apply_positional(q, k, positions, cfg: ModelConfig):
+    if cfg.mrope_sections is not None:
+        q = layers.apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = layers.apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def gqa_scores_reference(q, k, v, *, causal: bool, sliding_window: Optional[int]):
+    """Reference attention: q (B,S,H,hd), k/v (B,T,K,hd) -> (B,S,H,hd).
+
+    fp32 softmax; GQA via head-group reshape; optional causal + sliding
+    window masking (absolute positions assumed aligned: query i attends key
+    j iff j <= i and i - j < window).
+    """
+    b, s, h, hd = q.shape
+    t, kheads = k.shape[1], k.shape[2]
+    g = h // kheads
+    q = q.reshape(b, s, kheads, g, hd)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k).astype(jnp.float32) * scale
+    if causal:
+        qpos = jnp.arange(s)[:, None] + (t - s)   # queries occupy the suffix
+        kpos = jnp.arange(t)[None, :]
+        mask = kpos <= qpos
+        if sliding_window is not None:
+            mask &= kpos > qpos - sliding_window
+        scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, h, hd)
+
+
+def chunked_attention(q, k, v, *, causal: bool, sliding_window: Optional[int],
+                      q_chunk: int = 512):
+    """Memory-bounded attention: lax.scan over query chunks, fp32 softmax.
+
+    Peak score buffer is (b, h, q_chunk, t) instead of (b, h, s, t) — this is
+    what the dry-run lowers when the Pallas kernel path is off (same math as
+    gqa_scores_reference; flash-style streaming happens inside the kernel on
+    real hardware).
+    """
+    b, s, h, hd = q.shape
+    t, kheads = k.shape[1], k.shape[2]
+    g = h // kheads
+    q_chunk = min(q_chunk, s)
+    if s % q_chunk:
+        return gqa_scores_reference(q, k, v, causal=causal,
+                                    sliding_window=sliding_window)
+    nq = s // q_chunk
+    scale = hd ** -0.5
+    qc = jnp.moveaxis(q.reshape(b, nq, q_chunk, kheads, g, hd), 1, 0)
+    kpos = jnp.arange(t)[None, :]
+
+    def step(_, inp):
+        qblk, idx = inp                                       # (b,qc,k,g,d)
+        scores = jnp.einsum("bskgd,btkd->bkgst", qblk, k).astype(jnp.float32) * scale
+        if causal:
+            qpos = idx * q_chunk + jnp.arange(q_chunk)[:, None] + (t - s)
+            mask = kpos <= qpos
+            if sliding_window is not None:
+                mask &= kpos > qpos - sliding_window
+            scores = jnp.where(mask, scores, -jnp.inf)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bkgst,btkd->bskgd", probs, v)       # (b,qc,k,g,d)
+        return None, out
+
+    _, outs = jax.lax.scan(step, None, (qc, jnp.arange(nq)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, h, hd)
+    return out
+
+
+def attention(p: dict, x: jax.Array, positions: jax.Array, cfg: ModelConfig,
+              *, num_heads: Optional[int] = None, num_kv_heads: Optional[int] = None,
+              causal: bool = True) -> jax.Array:
+    """Full-sequence attention (training / prefill)."""
+    nh = num_heads or cfg.num_heads
+    nk = num_kv_heads or cfg.num_kv_heads
+    q, k, v = _project_qkv(p, x, cfg, nh, nk)
+    if positions is not None:
+        q, k = _apply_positional(q, k, positions, cfg)
+    if cfg.use_flash_kernel and causal:
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=True,
+                                   sliding_window=cfg.sliding_window)
+    elif x.shape[1] > 1024:
+        out = chunked_attention(q, k, v, causal=causal,
+                                sliding_window=cfg.sliding_window)
+    else:
+        out = gqa_scores_reference(q, k, v, causal=causal,
+                                   sliding_window=cfg.sliding_window)
+    b, s = x.shape[:2]
+    return out.reshape(b, s, -1) @ p["wo"]
+
+
+def cross_attention(p: dict, x: jax.Array, kv_src: jax.Array, cfg: ModelConfig,
+                    num_heads: int, num_kv_heads: int) -> jax.Array:
+    """Encoder-decoder cross attention (no positional rotation, no mask)."""
+    hd = cfg.resolved_head_dim
+    b, s, _ = x.shape
+    t = kv_src.shape[1]
+    q = (x @ p["wq"]).reshape(b, s, num_heads, hd)
+    k = (kv_src @ p["wk"]).reshape(b, t, num_kv_heads, hd)
+    v = (kv_src @ p["wv"]).reshape(b, t, num_kv_heads, hd)
+    out = gqa_scores_reference(q, k, v, causal=False, sliding_window=None)
+    return out.reshape(b, s, -1) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# decode path
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array   # (B, T_max, K, hd)
+    v: jax.Array   # (B, T_max, K, hd)
+
+
+def init_kv_cache(batch: int, max_len: int, num_kv_heads: int, head_dim: int,
+                  dtype) -> KVCache:
+    shape = (batch, max_len, num_kv_heads, head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def decode_attention(p: dict, x: jax.Array, cache: KVCache, pos: jax.Array,
+                     cfg: ModelConfig, *, num_heads: Optional[int] = None,
+                     num_kv_heads: Optional[int] = None
+                     ) -> Tuple[jax.Array, KVCache]:
+    """One-token decode: x (B, 1, D), pos scalar int32 (current position).
+
+    Updates the cache in place (functional donation-friendly) and attends
+    over the first pos+1 entries via masking (static shapes for jit).
+    """
+    nh = num_heads or cfg.num_heads
+    nk = num_kv_heads or cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    b = x.shape[0]
+    q, k_new, v_new = _project_qkv(p, x, cfg, nh, nk)
+    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    if cfg.mrope_sections is not None:
+        nsec = len(cfg.mrope_sections)
+        mpos = jnp.broadcast_to(positions, (nsec,) + positions.shape)
+        q, k_new = _apply_positional(q, k_new, mpos, cfg)
+    else:
+        q, k_new = _apply_positional(q, k_new, positions, cfg)
+    k = jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype), (0, pos, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype), (0, pos, 0, 0))
+
+    t = k.shape[1]
+    g = nh // nk
+    qr = q.reshape(b, 1, nk, g, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qr, k).astype(jnp.float32) * hd ** -0.5
+    kpos = jnp.arange(t)[None, :]
+    mask = kpos <= pos
+    if cfg.sliding_window is not None:
+        mask &= kpos > pos - cfg.sliding_window
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v).reshape(b, 1, nh * hd)
+    return out @ p["wo"], KVCache(k=k, v=v)

@@ -1,0 +1,160 @@
+"""Whisper-style encoder-decoder backbone.
+
+The audio conv frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings (batch, enc_len, d_model) provided by
+``input_specs()``.  Whisper uses LayerNorm (with bias), GELU MLPs, learned
+decoder positions and sinusoidal encoder positions; attention is MHA
+(num_kv_heads == num_heads).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import layers, mlp
+from repro.models.api import EncDecConfig, ModelConfig
+from repro.parallel.constraints import constrain
+from repro.models.transformer import Model, _remat, _stacked_init
+
+__all__ = ["build_encdec"]
+
+
+def _init_ln(d, dtype):
+    return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def _ln(x, p, eps):
+    return layers.layer_norm(x, p["w"], p["b"], eps)
+
+
+def _init_enc_layer(rng, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(rng)
+    return {
+        "ln1": _init_ln(cfg.d_model, dtype),
+        "attn": attn.init_attn(k1, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                               cfg.resolved_head_dim, True, dtype),
+        "ln2": _init_ln(cfg.d_model, dtype),
+        "mlp": mlp.init_mlp(k2, cfg.d_model, cfg.d_ff, "gelu", dtype),
+    }
+
+
+def _init_dec_layer(rng, cfg: ModelConfig, dtype):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "ln1": _init_ln(cfg.d_model, dtype),
+        "self_attn": attn.init_attn(k1, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                                    cfg.resolved_head_dim, True, dtype),
+        "ln2": _init_ln(cfg.d_model, dtype),
+        "cross_attn": attn.init_attn(k2, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                                     cfg.resolved_head_dim, True, dtype),
+        "ln3": _init_ln(cfg.d_model, dtype),
+        "mlp": mlp.init_mlp(k3, cfg.d_model, cfg.d_ff, "gelu", dtype),
+    }
+
+
+def _sinusoids(length: int, channels: int) -> jax.Array:
+    log_timescale = jnp.log(10_000.0) / (channels // 2 - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(channels // 2))
+    scaled = jnp.arange(length)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(scaled), jnp.cos(scaled)], axis=1)
+
+
+def build_encdec(cfg: ModelConfig) -> Model:
+    dtype = cfg.activation_dtype
+    e = cfg.encdec or EncDecConfig()
+    eps = 1e-5
+
+    def init(rng):
+        k1, k2, k3, k4 = jax.random.split(rng, 4)
+        return {
+            "enc_layers": _stacked_init(lambda k: _init_enc_layer(k, cfg, dtype),
+                                        k1, e.enc_layers),
+            "enc_norm": _init_ln(cfg.d_model, dtype),
+            "dec_layers": _stacked_init(lambda k: _init_dec_layer(k, cfg, dtype),
+                                        k2, cfg.num_layers),
+            "dec_norm": _init_ln(cfg.d_model, dtype),
+            "embed": (jax.random.normal(k3, (cfg.padded_vocab_size, cfg.d_model)) * 0.02
+                      ).astype(dtype),
+            "dec_pos": (jax.random.normal(k4, (e.max_dec_len, cfg.d_model)) * 0.01).astype(dtype),
+        }
+
+    def encode(params, frames):
+        x = frames.astype(dtype)
+        x = x + _sinusoids(x.shape[1], cfg.d_model).astype(dtype)[None]
+
+        def body(carry, lp):
+            h = carry + attn.attention(lp["attn"], _ln(carry, lp["ln1"], eps),
+                                       None, cfg, causal=False)
+            h = h + mlp.mlp(lp["mlp"], _ln(h, lp["ln2"], eps), "gelu")
+            return constrain(h, "hidden"), None
+
+        x, _ = jax.lax.scan(_remat(body, cfg), x, params["enc_layers"])
+        return _ln(x, params["enc_norm"], eps)
+
+    def _decoder(params, x, enc_out, positions):
+        def body(carry, lp):
+            h = carry + attn.attention(
+                lp["self_attn"], _ln(carry, lp["ln1"], eps), positions, cfg)
+            h = h + attn.cross_attention(
+                lp["cross_attn"], _ln(h, lp["ln2"], eps), enc_out, cfg,
+                cfg.num_heads, cfg.num_kv_heads)
+            h = h + mlp.mlp(lp["mlp"], _ln(h, lp["ln3"], eps), "gelu")
+            return constrain(h, "hidden"), None
+
+        x, _ = jax.lax.scan(_remat(body, cfg), x, params["dec_layers"])
+        return _ln(x, params["dec_norm"], eps)
+
+    def forward(params, batch):
+        """batch: frames (B, enc_len, D) + tokens (B, S)."""
+        enc_out = encode(params, batch["frames"])
+        toks = batch["tokens"]
+        b, s = toks.shape
+        x = layers.embed(params["embed"], toks, dtype)
+        x = x + jax.lax.dynamic_slice_in_dim(params["dec_pos"], 0, s, 0)[None]
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        x = _decoder(params, x, enc_out, positions)
+        logits = (x @ params["embed"].T.astype(x.dtype)).astype(jnp.float32)
+        return constrain(logits, "logits"), jnp.zeros((), jnp.float32)
+
+    def init_cache(batch, max_len):
+        return {
+            "kv": jax.vmap(
+                lambda _: attn.init_kv_cache(batch, max_len, cfg.num_kv_heads,
+                                             cfg.resolved_head_dim, dtype)
+            )(jnp.arange(cfg.num_layers)),
+            "enc_out": jnp.zeros((batch, e.enc_len, cfg.d_model), dtype),
+        }
+
+    def decode_step(params, cache, tokens, pos):
+        x = layers.embed(params["embed"], tokens, dtype)
+        x = x + jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos, 1, 0)[None]
+        enc_out = cache["enc_out"]
+
+        def body(carry, xs):
+            h, c = carry
+            lp, idx = xs
+            kv = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, idx, 0, keepdims=False), c)
+            a, new_kv = attn.decode_attention(
+                lp["self_attn"], _ln(h, lp["ln1"], eps), kv, pos, cfg)
+            h = h + a
+            h = h + attn.cross_attention(
+                lp["cross_attn"], _ln(h, lp["ln2"], eps), enc_out, cfg,
+                cfg.num_heads, cfg.num_kv_heads)
+            h = h + mlp.mlp(lp["mlp"], _ln(h, lp["ln3"], eps), "gelu")
+            c = jax.tree.map(
+                lambda a, n: jax.lax.dynamic_update_slice_in_dim(
+                    a, n[None].astype(a.dtype), idx, 0), c, new_kv)
+            return (h, c), None
+
+        (x, new_kv), _ = jax.lax.scan(
+            body, (x, cache["kv"]),
+            (params["dec_layers"], jnp.arange(cfg.num_layers)))
+        x = _ln(x, params["dec_norm"], eps)
+        logits = (x @ params["embed"].T.astype(x.dtype)).astype(jnp.float32)
+        return logits, {"kv": new_kv, "enc_out": enc_out}
+
+    return Model(cfg, init, forward, init_cache, decode_step)

@@ -1,0 +1,86 @@
+"""Shared layers: norms, rotary embeddings (RoPE + sectioned M-RoPE),
+token embedding.  Pure functions over explicit parameter arrays."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rms_norm",
+    "layer_norm",
+    "rope_frequencies",
+    "apply_rope",
+    "apply_mrope",
+    "embed",
+]
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm in fp32 accumulation (the universal LM convention)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mean) * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim/2,) inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def _rotate(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Rotate pairs laid out as [x0..x_{d/2-1} | x_{d/2}..x_{d-1}] (HF layout)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Standard RoPE.  x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    inv = rope_frequencies(head_dim, theta)                      # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * inv      # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                          # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections: Tuple[int, ...]) -> jax.Array:
+    """Multimodal rotary embedding (Qwen2-VL §2.1).
+
+    ``positions``: (n_sections, ..., seq) — e.g. (temporal, height, width)
+    position ids.  ``sections`` splits the head_dim/2 frequency bands among
+    the position components; text tokens use identical ids in every section,
+    which makes M-RoPE degenerate to standard RoPE (tested).
+    """
+    head_dim = x.shape[-1]
+    inv = rope_frequencies(head_dim, theta)                      # (hd/2,)
+    assert sum(sections) == inv.shape[0], (sections, inv.shape)
+    # build per-frequency-band position ids by section
+    idx = jnp.concatenate(
+        [jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(sections)]
+    )                                                            # (hd/2,)
+    pos = jnp.take(positions, idx, axis=0)                       # (hd/2, ..., seq)
+    pos = jnp.moveaxis(pos, 0, -1)                               # (..., seq, hd/2)
+    angles = pos.astype(jnp.float32) * inv
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def embed(table: jax.Array, tokens: jax.Array, dtype) -> jax.Array:
+    return jnp.take(table, tokens, axis=0).astype(dtype)

@@ -1,0 +1,32 @@
+"""Feed-forward blocks: SwiGLU (llama family), GeGLU (gemma), GELU (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_mlp", "mlp"]
+
+
+def init_mlp(rng, d_model: int, d_ff: int, act: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    scale_in = d_model ** -0.5
+    scale_out = d_ff ** -0.5
+    p = {
+        "w_up": (jax.random.normal(k2, (d_model, d_ff)) * scale_in).astype(dtype),
+        "w_down": (jax.random.normal(k3, (d_ff, d_model)) * scale_out).astype(dtype),
+    }
+    if act in ("swiglu", "geglu"):
+        p["w_gate"] = (jax.random.normal(k1, (d_model, d_ff)) * scale_in).astype(dtype)
+    return p
+
+
+def mlp(p: dict, x: jax.Array, act: str) -> jax.Array:
+    if act == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    elif act == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"], approximate=True) * (x @ p["w_up"])
+    elif act == "gelu":
+        h = jax.nn.gelu(x @ p["w_up"], approximate=True)
+    else:
+        raise ValueError(f"unknown activation {act!r}")
+    return h @ p["w_down"]

@@ -1,0 +1,185 @@
+"""Mixture-of-Experts FFN with capacity-based token dispatch (GShard-style).
+
+Dispatch is scatter-based over a flat (E*C, D) buffer — no (B,S,E,C) one-hot
+tensor is ever materialized, which keeps the activation footprint linear in
+tokens.  The expert matmul is a single grouped einsum ``ecd,edf->ecf`` whose
+E (olmoe) or F (mixtral) axis is sharded by the parallel layer (EP vs
+TP-experts; see parallel/sharding.py).
+
+Decode uses the dense weighted-sum path: with one token per sequence all
+expert weights stream from HBM anyway, so the E/K extra FLOPs are free under
+the decode memory roofline.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import MoEConfig
+
+__all__ = ["init_moe", "moe_ffn", "moe_ffn_flat", "moe_ffn_dense"]
+
+
+def init_moe(rng, d_model: int, cfg: MoEConfig, dtype) -> dict:
+    kr, kg, ku, kd = jax.random.split(rng, 4)
+    e, f = cfg.num_experts, cfg.d_ff_expert
+    si, so = d_model ** -0.5, f ** -0.5
+    return {
+        "router": (jax.random.normal(kr, (d_model, e)) * si).astype(jnp.float32),
+        "w_gate": (jax.random.normal(kg, (e, d_model, f)) * si).astype(dtype),
+        "w_up": (jax.random.normal(ku, (e, d_model, f)) * si).astype(dtype),
+        "w_down": (jax.random.normal(kd, (e, f, d_model)) * so).astype(dtype),
+    }
+
+
+def _route(p: dict, xf: jax.Array, cfg: MoEConfig) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Router: (N, D) -> top-k (gates (N,K), expert ids (N,K), aux loss)."""
+    logits = (xf.astype(jnp.float32) @ p["router"])          # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, cfg.top_k)            # (N, K)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+    # Switch-style load-balancing auxiliary loss.
+    me = jnp.mean(probs, axis=0)                              # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(eidx, cfg.num_experts, dtype=jnp.float32), axis=1), axis=0
+    ) / cfg.top_k
+    aux = cfg.num_experts * jnp.sum(me * ce)
+    return gates, eidx, aux
+
+
+def moe_ffn(p: dict, x: jax.Array, cfg: MoEConfig, act: str
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Capacity-based MoE: x (B, S, D) -> (out (B, S, D), aux_loss).
+
+    Dispatch is *row-local*: each sequence (batch row) has its own per-expert
+    capacity ceil(S*K*cf/E) and its own scatter buffer, so with the batch dim
+    sharded over the data axes the dispatch/combine involves NO cross-shard
+    communication (§Perf: the flat-global variant scattered through a
+    replicated buffer, costing an all-reduce of the whole buffer per layer).
+    The buffer's batch dim is constrained to the batch sharding.
+    """
+    from repro.parallel.constraints import constrain
+
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    cap = int(math.ceil(s * k * cfg.capacity_factor / e))
+
+    gates_f, eidx_f, aux = _route(p, x.reshape(-1, d), cfg)
+    gates = gates_f.reshape(b, s, k)
+    eidx = eidx_f.reshape(b, s, k)
+
+    # position of each (token, slot) within its (row, expert)
+    flat_e = eidx.reshape(b, s * k)                              # (B, S*K)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)          # (B, S*K, E)
+    pos_all = jnp.cumsum(onehot, axis=1) - 1
+    pos = jnp.take_along_axis(pos_all, flat_e[..., None], axis=2)[..., 0]
+    keep = pos < cap
+    slot = jnp.where(keep, flat_e * cap + pos, e * cap)          # (B, S*K)
+    slot = slot.reshape(b, s, k)
+
+    rows = jnp.arange(b)[:, None]
+    buf = jnp.zeros((b, e * cap + 1, d), x.dtype)
+    for j in range(k):
+        buf = buf.at[rows, slot[:, :, j]].add(x)
+    buf = constrain(buf, "batch")
+    bufr = buf[:, : e * cap].reshape(b, e, cap, d)
+
+    # grouped expert FFN (E or F axis sharded by the parallel layer)
+    if act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", bufr, p["w_gate"])) * jnp.einsum(
+            "becd,edf->becf", bufr, p["w_up"]
+        )
+    elif act == "geglu":
+        h = jax.nn.gelu(jnp.einsum("becd,edf->becf", bufr, p["w_gate"]),
+                        approximate=True) * jnp.einsum("becd,edf->becf", bufr, p["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("becd,edf->becf", bufr, p["w_up"]), approximate=True)
+    y = jnp.einsum("becf,efd->becd", h, p["w_down"])
+    y = constrain(y, "batch")
+
+    # combine: gather each slot's output, weight by its gate
+    yf = jnp.concatenate(
+        [y.reshape(b, e * cap, d), jnp.zeros((b, 1, d), y.dtype)], axis=1)
+    out = jnp.zeros_like(x)
+    for j in range(k):
+        out = out + gates[:, :, j, None].astype(x.dtype) * yf[rows, slot[:, :, j]]
+    return out, aux
+
+
+def moe_ffn_dense(p: dict, x: jax.Array, cfg: MoEConfig, act: str
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Dense path (decode): every expert computes, outputs are gate-weighted.
+
+    A scan over experts keeps peak activation memory at one expert's worth.
+    """
+    b, s, d = x.shape
+    xf = x.reshape(-1, d)
+    gates, eidx, aux = _route(p, xf, cfg)
+    # per-expert combine weight for each token: sum of gates routed to it
+    w = jnp.zeros((xf.shape[0], cfg.num_experts), jnp.float32)
+    for j in range(cfg.top_k):
+        w = w + gates[:, j, None] * jax.nn.one_hot(eidx[:, j], cfg.num_experts)
+
+    def body(acc, ep):
+        wg, wu, wd, we = ep
+        if act == "swiglu":
+            h = jax.nn.silu(xf @ wg) * (xf @ wu)
+        elif act == "geglu":
+            h = jax.nn.gelu(xf @ wg, approximate=True) * (xf @ wu)
+        else:
+            h = jax.nn.gelu(xf @ wu, approximate=True)
+        return acc + we[:, None].astype(x.dtype) * (h @ wd), None
+
+    acc0 = jnp.zeros_like(xf)
+    acc, _ = jax.lax.scan(
+        body, acc0,
+        (p["w_gate"], p["w_up"], p["w_down"], jnp.moveaxis(w, 1, 0)),
+    )
+    return acc.reshape(b, s, d), aux
+
+
+def moe_ffn_flat(p: dict, x: jax.Array, cfg: MoEConfig, act: str
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Baseline dispatch: one global flat-token capacity buffer.
+
+    Kept for the §Perf A/B — the global cumsum and the unsharded (E*C, D)
+    buffer force cross-shard collectives per layer (see EXPERIMENTS.md).
+    """
+    b, s, d = x.shape
+    xf = x.reshape(-1, d)
+    n = xf.shape[0]
+    e, k = cfg.num_experts, cfg.top_k
+    cap = int(math.ceil(n * k * cfg.capacity_factor / e))
+
+    gates, eidx, aux = _route(p, xf, cfg)
+    flat_e = eidx.reshape(-1)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+    pos_all = jnp.cumsum(onehot, axis=0) - 1
+    pos = jnp.take_along_axis(pos_all, flat_e[:, None], axis=1)[:, 0]
+    keep = pos < cap
+    slot = jnp.where(keep, flat_e * cap + pos, e * cap)
+    slot_nk = slot.reshape(n, k)
+
+    buf = jnp.zeros((e * cap + 1, d), x.dtype)
+    for j in range(k):
+        buf = buf.at[slot_nk[:, j]].add(xf)
+    bufr = buf[: e * cap].reshape(e, cap, d)
+
+    if act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", bufr, p["w_gate"])) * jnp.einsum(
+            "ecd,edf->ecf", bufr, p["w_up"])
+    elif act == "geglu":
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", bufr, p["w_gate"]),
+                        approximate=True) * jnp.einsum("ecd,edf->ecf", bufr, p["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", bufr, p["w_up"]), approximate=True)
+    y = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+
+    yf = jnp.concatenate([y.reshape(e * cap, d), jnp.zeros((1, d), y.dtype)], axis=0)
+    out = jnp.zeros_like(xf)
+    for j in range(k):
+        out = out + gates[:, j, None].astype(x.dtype) * yf[slot_nk[:, j]]
+    return out.reshape(b, s, d), aux

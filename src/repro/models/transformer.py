@@ -1,0 +1,383 @@
+"""Decoder-only LM assembly for the dense / moe / ssm / hybrid families.
+
+Layers are parameter-stacked and driven by ``jax.lax.scan`` so the lowered
+HLO is O(1) in depth (essential for compiling 80-layer configs in the
+multi-pod dry-run) with a selectable remat policy.
+
+The hybrid (Zamba2-style) model scans over super-blocks: ``shared_every``
+Mamba2 layers followed by one application of a weight-shared attention
+block; a ragged tail of Mamba2 layers runs after the main scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import layers, mlp, moe, ssm
+from repro.models.api import ModelConfig
+from repro.parallel.constraints import constrain
+
+__all__ = ["Model", "build_model"]
+
+
+class Model(NamedTuple):
+    config: ModelConfig
+    init: Callable            # rng -> params
+    forward: Callable         # (params, batch) -> logits (B, S, V)
+    init_cache: Callable      # (batch, max_len) -> cache pytree
+    decode_step: Callable     # (params, cache, tokens (B,1), pos) -> (logits, cache)
+
+
+def _remat(f, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return f
+    if cfg.remat == "full":
+        return jax.checkpoint(f)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            f, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    raise ValueError(cfg.remat)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _init_attn_block(rng, cfg: ModelConfig, dtype) -> dict:
+    k1, k2 = jax.random.split(rng)
+    p = {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "attn": attn.init_attn(k1, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                               cfg.resolved_head_dim, cfg.qkv_bias, dtype),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if cfg.moe is not None:
+        p["moe"] = moe.init_moe(k2, cfg.d_model, cfg.moe, dtype)
+    else:
+        p["mlp"] = mlp.init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.act, dtype)
+    return p
+
+
+def _attn_block(p: dict, x: jax.Array, positions, cfg: ModelConfig,
+                dense_moe: bool = False) -> Tuple[jax.Array, jax.Array]:
+    h = x + attn.attention(p["attn"], layers.rms_norm(x, p["ln1"], cfg.norm_eps),
+                           positions, cfg)
+    z = layers.rms_norm(h, p["ln2"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe is not None:
+        if dense_moe:
+            fn = moe.moe_ffn_dense
+        else:
+            fn = moe.moe_ffn if cfg.moe.dispatch == "row" else moe.moe_ffn_flat
+        y, aux = fn(p["moe"], z, cfg.moe, cfg.act)
+    else:
+        y = mlp.mlp(p["mlp"], z, cfg.act)
+    return h + y, aux
+
+
+def _init_ssm_block(rng, cfg: ModelConfig, dtype) -> dict:
+    return {
+        "ln": jnp.zeros((cfg.d_model,), dtype),
+        "ssm": ssm.init_ssm(rng, cfg.d_model, cfg.ssm, dtype),
+    }
+
+
+def _ssm_block(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    return x + ssm.ssm_mixer(p["ssm"], layers.rms_norm(x, p["ln"], cfg.norm_eps),
+                             cfg, use_kernel=cfg.use_flash_kernel)
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+
+def _init_embedding(rng, cfg: ModelConfig, dtype) -> dict:
+    ke, ko = jax.random.split(rng)
+    p = {
+        "embed": (jax.random.normal(ke, (cfg.padded_vocab_size, cfg.d_model)) * 0.02).astype(dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = (
+            jax.random.normal(ko, (cfg.d_model, cfg.padded_vocab_size)) * cfg.d_model ** -0.5
+        ).astype(dtype)
+    return p
+
+
+def _embed_in(params, batch, cfg: ModelConfig):
+    dtype = cfg.activation_dtype
+    if cfg.embeds_input:
+        x = batch["embeds"].astype(dtype)
+    else:
+        x = layers.embed(params["embed"], batch["tokens"], dtype)
+    x = constrain(x, "hidden")
+    b, s = x.shape[:2]
+    if cfg.mrope_sections is not None:
+        positions = batch.get("mrope_positions")
+        if positions is None:
+            base = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+            positions = jnp.broadcast_to(base[None], (len(cfg.mrope_sections), b, s))
+    else:
+        positions = batch.get("positions")
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    return x, positions
+
+
+def _logits_out(params, x, cfg: ModelConfig):
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return constrain((x @ head.astype(x.dtype)).astype(jnp.float32), "logits")
+
+
+def _stacked_init(fn, rng, n: int):
+    return jax.vmap(fn)(jax.random.split(rng, n))
+
+
+# ---------------------------------------------------------------------------
+# dense / moe / ssm decoder
+# ---------------------------------------------------------------------------
+
+def _build_decoder(cfg: ModelConfig) -> Model:
+    dtype = cfg.activation_dtype
+    is_ssm = cfg.family == "ssm"
+
+    def init(rng):
+        k1, k2 = jax.random.split(rng)
+        if is_ssm:
+            blocks = _stacked_init(lambda k: _init_ssm_block(k, cfg, dtype), k1,
+                                   cfg.num_layers)
+        else:
+            blocks = _stacked_init(lambda k: _init_attn_block(k, cfg, dtype), k1,
+                                   cfg.num_layers)
+        p = _init_embedding(k2, cfg, dtype)
+        p["blocks"] = blocks
+        return p
+
+    def forward(params, batch):
+        x, positions = _embed_in(params, batch, cfg)
+
+        if is_ssm:
+            def body(carry, lp):
+                return constrain(_ssm_block(lp, carry, cfg), "hidden"), None
+        else:
+            def body(carry, lp):
+                y, aux = _attn_block(lp, carry, positions, cfg)
+                return constrain(y, "hidden"), aux
+
+        body = _remat(body, cfg)
+        x, aux = jax.lax.scan(body, x, params["blocks"])
+        logits = _logits_out(params, x, cfg)
+        if aux is not None:
+            return logits, jnp.mean(aux)
+        return logits, jnp.zeros((), jnp.float32)
+
+    def init_cache(batch, max_len):
+        if is_ssm:
+            def one(_):
+                return ssm.init_ssm_state(batch, cfg.d_model, cfg.ssm, dtype)
+            return jax.vmap(one)(jnp.arange(cfg.num_layers))
+        def one(_):
+            return attn.init_kv_cache(batch, max_len, cfg.num_kv_heads,
+                                      cfg.resolved_head_dim, dtype)
+        return jax.vmap(one)(jnp.arange(cfg.num_layers))
+
+    def decode_step(params, cache, tokens, pos):
+        # The stacked cache rides in the scan CARRY and is updated in place
+        # with dynamic_update_slice at the layer index — donation then
+        # aliases the input cache buffer (emitting the new cache as scan ys
+        # forced a full per-step cache copy; see EXPERIMENTS.md #Perf).
+        x = layers.embed(params["embed"], tokens, dtype)         # (B, 1, D)
+
+        def read_layer(c, idx):
+            return jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, idx, 0, keepdims=False),
+                c)
+
+        def write_layer(c, new, idx):
+            return jax.tree.map(
+                lambda a, n: jax.lax.dynamic_update_slice_in_dim(
+                    a, n[None].astype(a.dtype), idx, 0), c, new)
+
+        if is_ssm:
+            def body(carry, xs):
+                h, c = carry
+                lp, idx = xs
+                st = read_layer(c, idx)
+                u = layers.rms_norm(h, lp["ln"], cfg.norm_eps)
+                y, new_st = ssm.ssm_decode_step(lp["ssm"], u, st, cfg)
+                return (h + y, write_layer(c, new_st, idx)), None
+        else:
+            def body(carry, xs):
+                h, c = carry
+                lp, idx = xs
+                kv = read_layer(c, idx)
+                a, new_kv = attn.decode_attention(
+                    lp["attn"], layers.rms_norm(h, lp["ln1"], cfg.norm_eps),
+                    kv, pos, cfg)
+                h = h + a
+                z = layers.rms_norm(h, lp["ln2"], cfg.norm_eps)
+                if cfg.moe is not None:
+                    y, _ = moe.moe_ffn_dense(lp["moe"], z, cfg.moe, cfg.act)
+                else:
+                    y = mlp.mlp(lp["mlp"], z, cfg.act)
+                return (h + y, write_layer(c, new_kv, idx)), None
+
+        if not cfg.decode_cache_in_carry:
+            # baseline path: per-layer cache as scan xs/ys (copies the cache)
+            if is_ssm:
+                def body_ys(carry, xs):
+                    lp, st = xs
+                    u = layers.rms_norm(carry, lp["ln"], cfg.norm_eps)
+                    y, new_st = ssm.ssm_decode_step(lp["ssm"], u, st, cfg)
+                    return carry + y, new_st
+            else:
+                def body_ys(carry, xs):
+                    lp, kv = xs
+                    a, new_kv = attn.decode_attention(
+                        lp["attn"], layers.rms_norm(carry, lp["ln1"], cfg.norm_eps),
+                        kv, pos, cfg)
+                    h = carry + a
+                    z = layers.rms_norm(h, lp["ln2"], cfg.norm_eps)
+                    if cfg.moe is not None:
+                        y, _ = moe.moe_ffn_dense(lp["moe"], z, cfg.moe, cfg.act)
+                    else:
+                        y = mlp.mlp(lp["mlp"], z, cfg.act)
+                    return h + y, new_kv
+            x, new_cache = jax.lax.scan(body_ys, x, (params["blocks"], cache))
+            return _logits_out(params, x, cfg), new_cache
+
+        (x, new_cache), _ = jax.lax.scan(
+            body, (x, cache),
+            (params["blocks"], jnp.arange(cfg.num_layers)))
+        return _logits_out(params, x, cfg), new_cache
+
+    return Model(cfg, init, forward, init_cache, decode_step)
+
+
+# ---------------------------------------------------------------------------
+# hybrid (Zamba2-style)
+# ---------------------------------------------------------------------------
+
+def _build_hybrid(cfg: ModelConfig) -> Model:
+    dtype = cfg.activation_dtype
+    h = cfg.hybrid
+    every = h.shared_every
+    n_super, tail = divmod(cfg.num_layers, every)
+    shared_cfg = dataclasses.replace(
+        cfg, num_heads=h.shared_num_heads, num_kv_heads=h.shared_num_kv_heads,
+        head_dim=0, moe=None,
+    )
+
+    def init(rng):
+        k1, k2, k3, k4 = jax.random.split(rng, 4)
+        main = _stacked_init(
+            lambda k: _stacked_init(lambda kk: _init_ssm_block(kk, cfg, dtype), k, every),
+            k1, n_super,
+        )                                                   # (n_super, every, ...)
+        p = _init_embedding(k4, cfg, dtype)
+        p["main"] = main
+        p["shared"] = _init_attn_block(k2, shared_cfg, dtype)
+        if tail:
+            p["tail"] = _stacked_init(lambda k: _init_ssm_block(k, cfg, dtype), k3, tail)
+        return p
+
+    def forward(params, batch):
+        x, positions = _embed_in(params, batch, cfg)
+
+        def inner(carry, lp):
+            return constrain(_ssm_block(lp, carry, cfg), "hidden"), None
+
+        def super_body(carry, sp):
+            y, _ = jax.lax.scan(_remat(inner, cfg), carry, sp)
+            y, _ = _attn_block(params["shared"], y, positions, shared_cfg)
+            return constrain(y, "hidden"), None
+
+        x, _ = jax.lax.scan(super_body, x, params["main"])
+        if tail:
+            x, _ = jax.lax.scan(_remat(inner, cfg), x, params["tail"])
+        return _logits_out(params, x, cfg), jnp.zeros((), jnp.float32)
+
+    def init_cache(batch, max_len):
+        def one_ssm(_):
+            return ssm.init_ssm_state(batch, cfg.d_model, cfg.ssm, dtype)
+        cache = {
+            "main_ssm": jax.vmap(lambda i: jax.vmap(one_ssm)(jnp.arange(every)))(
+                jnp.arange(n_super)),
+            "shared_kv": jax.vmap(
+                lambda _: attn.init_kv_cache(batch, max_len, h.shared_num_kv_heads,
+                                             shared_cfg.resolved_head_dim, dtype)
+            )(jnp.arange(n_super)),
+        }
+        if tail:
+            cache["tail_ssm"] = jax.vmap(one_ssm)(jnp.arange(tail))
+        return cache
+
+    def decode_step(params, cache, tokens, pos):
+        # caches ride in the scan carries and are updated in place at the
+        # (super-)layer index (same donation-aliasing fix as the decoder).
+        x = layers.embed(params["embed"], tokens, dtype)
+
+        def read_at(c, idx):
+            return jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, idx, 0, keepdims=False), c)
+
+        def write_at(c, new, idx):
+            return jax.tree.map(
+                lambda a, n: jax.lax.dynamic_update_slice_in_dim(
+                    a, n[None].astype(a.dtype), idx, 0), c, new)
+
+        def inner(carry, xs):
+            h, c = carry
+            lp, idx = xs
+            st = read_at(c, idx)
+            u = layers.rms_norm(h, lp["ln"], cfg.norm_eps)
+            y, new_st = ssm.ssm_decode_step(lp["ssm"], u, st, cfg)
+            return (h + y, write_at(c, new_st, idx)), None
+
+        def super_body(carry, xs):
+            h, main_c, kv_c = carry
+            sp, sidx = xs
+            ssm_c = read_at(main_c, sidx)
+            (h, new_ssm), _ = jax.lax.scan(
+                inner, (h, ssm_c), (sp, jnp.arange(every)))
+            main_c = write_at(main_c, new_ssm, sidx)
+            kv = read_at(kv_c, sidx)
+            a, new_kv = attn.decode_attention(
+                params["shared"]["attn"],
+                layers.rms_norm(h, params["shared"]["ln1"], cfg.norm_eps),
+                kv, pos, shared_cfg)
+            h = h + a
+            z = layers.rms_norm(h, params["shared"]["ln2"], cfg.norm_eps)
+            h = h + mlp.mlp(params["shared"]["mlp"], z, cfg.act)
+            return (h, main_c, write_at(kv_c, new_kv, sidx)), None
+
+        (x, new_main, new_kv), _ = jax.lax.scan(
+            super_body, (x, cache["main_ssm"], cache["shared_kv"]),
+            (params["main"], jnp.arange(n_super)))
+        new_cache = {"main_ssm": new_main, "shared_kv": new_kv}
+        if tail:
+            (x, new_tail), _ = jax.lax.scan(
+                inner, (x, cache["tail_ssm"]),
+                (params["tail"], jnp.arange(tail)))
+            new_cache["tail_ssm"] = new_tail
+        return _logits_out(params, x, cfg), new_cache
+
+    return Model(cfg, init, forward, init_cache, decode_step)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family in ("dense", "moe", "ssm"):
+        return _build_decoder(cfg)
+    if cfg.family == "hybrid":
+        return _build_hybrid(cfg)
+    if cfg.family == "encdec":
+        from repro.models.encdec import build_encdec
+        return build_encdec(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

@@ -1,0 +1,93 @@
+"""Sharded AdamW (+ SGD) — minimal, dependency-free optimizer.
+
+Optimizer state (mu, nu) is a pytree congruent with the parameters, so it
+inherits the FSDP/TP sharding (ZeRO-style: each data shard owns its slice
+of the moments).  Global-norm clipping and decoupled weight decay included.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw", "sgd", "Optimizer"]
+
+
+class Optimizer(NamedTuple):
+    init: Callable    # params -> state
+    update: Callable  # (grads, state, params) -> (new_params, new_state)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    learning_rate: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: Optional[float] = 1.0
+    # moments dtype: fp32 master statistics regardless of param dtype
+    state_dtype: str = "float32"
+
+
+def _global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw(cfg: AdamWConfig = AdamWConfig()) -> Optimizer:
+    sdt = jnp.dtype(cfg.state_dtype)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, sdt)
+        return {
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        if cfg.grad_clip_norm is not None:
+            gnorm = _global_norm(grads)
+            scale = jnp.minimum(1.0, cfg.grad_clip_norm / jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+        b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+        b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(sdt)
+            m = cfg.b1 * m + (1 - cfg.b1) * g32
+            v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+            mhat = m / b1c
+            vhat = v / b2c
+            step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+            step = step + cfg.weight_decay * p.astype(sdt)
+            new_p = p.astype(sdt) - cfg.learning_rate * step
+            return new_p.astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["mu"], state["nu"], params)
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"mu": new_mu, "nu": new_nu, "count": count}
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd(lr: float = 1e-2, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"mu": jax.tree.map(jnp.zeros_like, params),
+                "nu": jax.tree.map(lambda p: jnp.zeros((), p.dtype), params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        mu = jax.tree.map(lambda m, g: momentum * m + g.astype(m.dtype),
+                          state["mu"], grads)
+        params = jax.tree.map(lambda p, m: (p - lr * m).astype(p.dtype), params, mu)
+        return params, {"mu": mu, "nu": state["nu"], "count": state["count"] + 1}
+
+    return Optimizer(init=init, update=update)

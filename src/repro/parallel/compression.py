@@ -1,0 +1,105 @@
+"""Gradient compression for cross-pod reduction (distributed-optimization
+substrate): top-k sparsification and int8 quantization, both with error
+feedback so compression error accumulates locally instead of being lost.
+
+At production scale these wrap the cross-pod (DP) gradient reduction —
+within a pod, FSDP reduce-scatter stays exact; across pods (the slow ICI /
+DCN hop) gradients are compressed.  ``wrap_optimizer`` composes with any
+``repro.optim`` Optimizer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import Optimizer
+
+__all__ = ["CompressionConfig", "topk_compress", "topk_decompress",
+           "int8_compress", "int8_decompress", "wrap_optimizer"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    method: str = "topk"        # topk | int8 | none
+    topk_ratio: float = 0.05    # fraction of entries kept
+
+
+def topk_compress(g: jax.Array, ratio: float):
+    flat = g.reshape(-1).astype(jnp.float32)
+    k = max(1, int(flat.size * ratio))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    kept = flat[idx]
+    return kept, idx, g.shape
+
+
+def topk_decompress(kept, idx, shape):
+    flat = jnp.zeros(int(jnp.prod(jnp.array(shape))), jnp.float32)
+    return flat.at[idx].set(kept).reshape(shape)
+
+
+def int8_compress(g: jax.Array):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decompress(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def _compress_tree(grads, residual, cfg: CompressionConfig):
+    """Apply compression with error feedback leaf-wise; returns
+    (decompressed grads as would arrive after the wire, new residual)."""
+
+    def leaf(g, r):
+        g = g.astype(jnp.float32) + r
+        if cfg.method == "topk":
+            kept, idx, shape = topk_compress(g, cfg.topk_ratio)
+            out = topk_decompress(kept, idx, shape)
+        elif cfg.method == "int8":
+            q, scale = int8_compress(g)
+            out = int8_decompress(q, scale)
+        else:
+            out = g
+        return out, g - out
+
+    flat = jax.tree.map(leaf, grads, residual)
+    out = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    res = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    return out, res
+
+
+def wrap_optimizer(base: Optimizer, cfg: CompressionConfig) -> Optimizer:
+    """Optimizer whose update sees compressed (error-fed-back) gradients.
+
+    State layout: {"base": <base state>, "residual": <grad-shaped fp32>}.
+    """
+
+    def init(params):
+        return {
+            "base": base.init(params),
+            "residual": jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+
+    def update(grads, state, params):
+        sent, residual = _compress_tree(grads, state["residual"], cfg)
+        new_params, new_base = base.update(sent, state["base"], params)
+        return new_params, {"base": new_base, "residual": residual}
+
+    return Optimizer(init=init, update=update)
+
+
+def compression_ratio(cfg: CompressionConfig, dtype_bytes: int = 4) -> float:
+    """Wire-bytes ratio vs uncompressed fp32 (for the roofline collective
+    term: cross-pod collective bytes scale by this factor)."""
+    if cfg.method == "topk":
+        # values fp32 + indices int32 per kept entry
+        return cfg.topk_ratio * (4 + 4) / dtype_bytes
+    if cfg.method == "int8":
+        return 1.0 / dtype_bytes
+    return 1.0

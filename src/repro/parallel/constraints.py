@@ -1,0 +1,85 @@
+"""Activation sharding constraints.
+
+XLA's sharding propagation alone can pick pathological layouts (e.g. the
+embedding table's FSDP-sharded d_model axis propagating into activations and
+replicating the batch).  Models call ``constrain(x, kind)`` at a few anchor
+points; a context-scoped policy maps the logical kind to a PartitionSpec.
+Without a policy (unit tests, single device) it is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["ActivationPolicy", "activation_sharding", "constrain"]
+
+_POLICY = contextvars.ContextVar("repro_activation_policy", default=None)
+
+
+@dataclasses.dataclass(frozen=True)
+class ActivationPolicy:
+    mesh: object                       # jax Mesh
+    batch_axes: Optional[tuple]        # e.g. ("pod", "data") — None disables
+    tensor_axis: Optional[str] = "model"
+    # Megatron-style sequence parallelism: the residual stream between TP
+    # regions is sharded over the tensor axis on its sequence dim, so saved
+    # (remat/scan) activations shrink by the TP degree; XLA turns the TP
+    # all-reduce into reduce-scatter + all-gather around the constraint.
+    seq_shard_hidden: bool = False
+
+    def _axis_size(self, axes) -> int:
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            return self.mesh.shape[axes]
+        return int(np.prod([self.mesh.shape[a] for a in axes]))
+
+    def spec_for(self, kind: str, shape: Tuple[int, ...]) -> Optional[P]:
+        batch = self.batch_axes
+        if batch is not None and shape[0] % self._axis_size(batch) != 0:
+            batch = None
+        if kind == "hidden":               # (B, S, D)
+            seq = None
+            if (self.seq_shard_hidden and self.tensor_axis is not None
+                    and shape[1] % self._axis_size(self.tensor_axis) == 0):
+                seq = self.tensor_axis
+            return P(batch, seq, None)
+        if kind == "logits":               # (B, S, V)
+            tensor = self.tensor_axis
+            if tensor is not None and shape[-1] % self._axis_size(tensor) != 0:
+                tensor = None
+            return P(batch, None, tensor)
+        if kind == "batch":                # (B, ...)
+            return P(batch, *(None,) * (len(shape) - 1))
+        if kind == "experts":              # (E, ...) expert-major MoE buffer
+            tensor = self.tensor_axis
+            if tensor is None or shape[0] % self._axis_size(tensor) != 0:
+                return None
+            return P(tensor, *(None,) * (len(shape) - 1))
+        return None
+
+
+@contextlib.contextmanager
+def activation_sharding(policy: ActivationPolicy):
+    token = _POLICY.set(policy)
+    try:
+        yield
+    finally:
+        _POLICY.reset(token)
+
+
+def constrain(x: jax.Array, kind: str) -> jax.Array:
+    policy = _POLICY.get()
+    if policy is None:
+        return x
+    spec = policy.spec_for(kind, x.shape)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(policy.mesh, spec))

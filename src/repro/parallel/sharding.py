@@ -1,0 +1,239 @@
+"""Sharding rules: PartitionSpecs for parameters, batches and decode caches.
+
+Scheme (see DESIGN.md §3):
+  * mesh axes ("pod", "data", "model") — "pod" optional;
+  * batch is sharded over ("pod", "data");
+  * weights are FSDP-sharded over "data" *within* a pod and replicated
+    across pods — each pod holds one complete FSDP replica, which makes the
+    pod the self-contained uncoordinated-checkpoint group of the paper
+    mapping (a pod-local checkpoint covers the whole model state);
+  * tensor parallel over "model": attention heads, FFN hidden, vocab;
+  * MoE experts: EP over "model" when num_experts divides the axis
+    (olmoe 64e), otherwise TP inside each expert (mixtral 8e on 16);
+  * decode caches: batch over the batch axes; the long-context (batch==1)
+    shapes shard the KV sequence over ("data","model") — sequence-parallel
+    decode.
+
+Specs are assigned *by leaf path* over an abstract (eval_shape) pytree, so
+every family/config stays in sync with the model code automatically.  Any
+axis that does not divide the dimension is dropped (replicated) — e.g.
+whisper's vocab 51865 is not 16-divisible and falls back to replicated.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.api import ModelConfig
+
+__all__ = ["ShardingRules", "make_rules", "param_specs", "batch_specs",
+           "cache_specs", "named_tree", "opt_specs"]
+
+DATA = "data"
+MODEL = "model"
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    batch: tuple                  # axes for the batch dim
+    fsdp: Optional[str]           # axis for FSDP weight sharding
+    tensor: Optional[str]         # axis for TP
+    expert_parallel: bool         # shard the expert dim over `tensor`
+    kv_heads_shard: bool = True   # decode cache: prefer KV-head over seq axis
+    # ZeRO-3 layout: shard the NON-contracted (output) dim of each weight so
+    # the partitioner always all-gathers weights instead of all-reducing
+    # matmul outputs (XLA picks per-op otherwise; MoE einsums picked AR).
+    shard_weight_out: bool = False
+
+
+def make_rules(cfg: ModelConfig, mesh: Mesh) -> ShardingRules:
+    has_pod = "pod" in mesh.axis_names
+    ep = cfg.moe is not None and cfg.moe.num_experts % mesh.shape[MODEL] == 0
+    return ShardingRules(
+        batch=("pod", DATA) if has_pod else (DATA,),
+        fsdp=DATA,
+        tensor=MODEL,
+        expert_parallel=ep,
+    )
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _fit(spec: P, shape, mesh: Mesh) -> P:
+    """Drop axes that don't divide their dim; replicate instead."""
+    fixed = []
+    for dim, axis in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        fixed.append(axis if dim % _axis_size(mesh, axis) == 0 else None)
+    return P(*fixed)
+
+
+def _path_str(path) -> str:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "name"):
+            out.append(str(k.name))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+    return "/".join(out)
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+_COL = ("wq", "wk", "wv", "w_gate", "w_up", "in_proj", "lm_head")   # (in, out-TP)
+_ROW = ("wo", "w_down", "out_proj")                                  # (in-TP, out)
+_VEC_TP = ("bq", "bk", "bv", "conv_b", "norm_w")
+_HEAD_VEC = ("A_log", "D", "dt_bias")
+
+
+def _param_rule(name: str, leaf, r: ShardingRules, in_moe: bool) -> P:
+    nd = leaf.ndim
+
+    def lead(base: P) -> P:
+        return P(*((None,) * (nd - len(base))), *base)
+
+    if r.shard_weight_out:
+        if in_moe and name in ("w_gate", "w_up", "w_down"):
+            return lead(P(None, None, r.fsdp))
+        if in_moe and name == "router":
+            return lead(P(None, None))
+        if name == "embed":
+            return P(r.fsdp, None)
+        if name == "dec_pos":
+            return P(None, r.fsdp)
+        if name in _COL or name in _ROW:
+            return lead(P(None, r.fsdp))
+        if name == "conv_w":
+            return lead(P(None, r.fsdp))
+        if name in _VEC_TP or name in _HEAD_VEC:
+            return lead(P(r.fsdp))
+        return P(*(None,) * nd)
+
+    if in_moe and name in ("w_gate", "w_up"):
+        base = P(r.tensor, r.fsdp, None) if r.expert_parallel else P(None, r.fsdp, r.tensor)
+        return lead(base)
+    if in_moe and name == "w_down":
+        base = P(r.tensor, None, r.fsdp) if r.expert_parallel else P(None, r.tensor, r.fsdp)
+        return lead(base)
+    if in_moe and name == "router":
+        return lead(P(None, None))
+    if name == "embed":
+        return P(r.tensor, r.fsdp)          # vocab TP, d_model FSDP
+    if name == "dec_pos":
+        return P(None, r.fsdp)
+    if name in _COL:
+        return lead(P(r.fsdp, r.tensor))
+    if name in _ROW:
+        return lead(P(r.tensor, r.fsdp))
+    if name == "conv_w":
+        return lead(P(None, r.tensor))
+    if name in _VEC_TP:
+        return lead(P(r.tensor))
+    if name in _HEAD_VEC:
+        return lead(P(r.tensor))
+    # norms, scalars, everything else: replicated
+    return P(*(None,) * nd)
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, abstract_params,
+                rules: Optional[ShardingRules] = None):
+    """PartitionSpec pytree matching an eval_shape of ``model.init``."""
+    r = rules or make_rules(cfg, mesh)
+
+    def assign(path, leaf):
+        ps = _path_str(path)
+        name = ps.rsplit("/", 1)[-1]
+        spec = _param_rule(name, leaf, r, in_moe="moe/" in ps or ps.startswith("moe"))
+        return _fit(spec, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(assign, abstract_params)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, abstract_batch,
+                rules: Optional[ShardingRules] = None):
+    r = rules or make_rules(cfg, mesh)
+
+    def assign(path, leaf):
+        name = _path_str(path).rsplit("/", 1)[-1]
+        if name == "pos":
+            return P()
+        if name == "mrope_positions":                      # (nsec, B, S)
+            return _fit(P(None, r.batch, None), leaf.shape, mesh)
+        base = P(r.batch, *(None,) * (leaf.ndim - 1))
+        return _fit(base, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(assign, abstract_batch)
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, abstract_cache, batch: int,
+                rules: Optional[ShardingRules] = None):
+    """Decode-state specs assigned by leaf path over the abstract cache.
+
+    KV leaves (named k/v) have layout (L..., B, T, K, hd): batch over the
+    batch axes when divisible; for batch==1 (long_500k) the sequence axis is
+    sharded over ("data", "model") instead.
+    """
+    r = rules or make_rules(cfg, mesh)
+    batch_ok = batch % _axis_size(mesh, r.batch) == 0
+    batch_axis = r.batch if batch_ok else None
+
+    def assign(path, leaf):
+        name = _path_str(path).rsplit("/", 1)[-1]
+        nd = leaf.ndim
+        if name in ("k", "v"):
+            # (L..., B, T, K, hd).  Prefer sharding the KV-head axis over
+            # the tensor axis (keeps the per-position cache update and the
+            # attention contraction shard-local); fall back to the sequence
+            # axis when the head count doesn't divide (GQA kv=8 on 16).
+            lead = (None,) * (nd - 4)
+            kv_heads = leaf.shape[-2]
+            if batch_axis is not None:
+                if r.kv_heads_shard and kv_heads % _axis_size(mesh, r.tensor) == 0:
+                    spec = P(*lead, batch_axis, None, r.tensor, None)
+                else:
+                    spec = P(*lead, batch_axis, r.tensor, None, None)
+            else:
+                spec = P(*lead, None, (DATA, MODEL), None, None)
+            return _fit(spec, leaf.shape, mesh)
+        if name == "ssd":                      # (L..., B, H, P, N)
+            lead = (None,) * (nd - 4)
+            spec = P(*lead, batch_axis, r.tensor, None, None)
+            return _fit(spec, leaf.shape, mesh)
+        if name == "conv":                     # (L..., B, W-1, conv_dim)
+            lead = (None,) * (nd - 3)
+            spec = P(*lead, batch_axis, None, r.tensor)
+            return _fit(spec, leaf.shape, mesh)
+        if name == "enc_out":                  # (B, T_enc, D)
+            return _fit(P(batch_axis, None, None), leaf.shape, mesh)
+        return P(*(None,) * nd)
+
+    return jax.tree_util.tree_map_with_path(assign, abstract_cache)
+
+
+def opt_specs(pspecs):
+    """Adam (mu, nu) mirror the parameter sharding; step count replicated."""
+    return {"mu": pspecs, "nu": pspecs, "count": P()}
+
+
+def named_tree(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

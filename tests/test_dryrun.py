@@ -1,0 +1,65 @@
+"""Dry-run integration tests.
+
+The dry-run needs 512 virtual devices (XLA flag set before jax init), so it
+runs in a subprocess.  One small cell per step kind keeps this CI-sized;
+the full 33-cell x 2-mesh grid runs via ``python -m repro.launch.dryrun
+--all`` (artifacts committed under benchmarks/artifacts/).
+"""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _run_cell(arch: str, shape: str, tmp_path, extra=()):
+    out = tmp_path / "rec.json"
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--out", str(out), *extra],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=560)
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    recs = json.loads(out.read_text())
+    assert len(recs) == 1
+    return recs[0]
+
+
+@pytest.mark.slow
+def test_dryrun_decode_cell(tmp_path):
+    rec = _run_cell("mamba2-370m", "decode_32k", tmp_path)
+    assert rec["num_devices"] == 256
+    assert rec["flops"] > 0
+    assert rec["memory"]["temp_size_in_bytes"] > 0
+
+
+@pytest.mark.slow
+def test_dryrun_train_cell_collectives(tmp_path):
+    rec = _run_cell("mamba2-370m", "train_4k", tmp_path)
+    c = rec["collectives"]
+    # FSDP weight gathers + gradient reductions must appear, trip-counted
+    assert c["counts"]["all-gather"] > 48        # > one per layer
+    assert c["total_bytes"] > 1e9
+    # HLO flops must be within sane multiples of 6ND (remat <= ~2x)
+    model = 6 * rec["active_params"] * 4096 * 256 / rec["num_devices"]
+    assert 0.8 * model < rec["flops"] < 3.0 * model
+
+
+def test_artifacts_cover_grid_if_present():
+    """When the committed grid artifacts exist they must cover all 33 cells
+    (and the multi mesh must prove the pod axis shards)."""
+    from repro.configs import grid
+    art = REPO / "benchmarks" / "artifacts"
+    for mesh, devices in (("single", 256), ("multi", 512)):
+        path = art / f"dryrun_{mesh}.json"
+        if not path.exists():
+            pytest.skip(f"{path} not generated yet")
+        recs = json.loads(path.read_text())
+        cells = {(r["arch"], r["shape"]) for r in recs}
+        assert cells == set(grid()), f"{mesh}: missing {set(grid()) - cells}"
+        assert all(r["num_devices"] == devices for r in recs)

@@ -1,0 +1,121 @@
+"""Unit tests for the paper's energy model (eqs 1-15) against hand-derived
+closed forms from Table 3 / §4.2 constants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import energy_model as em
+from repro.core.characterization import (
+    PowerTable,
+    paper_machine_profile,
+    paper_power_table,
+    paper_sleep_spec,
+)
+
+
+@pytest.fixture
+def ladder():
+    return em.LadderArrays.from_table(paper_power_table())
+
+
+@pytest.fixture
+def sleep():
+    return em.SleepArrays.from_spec(paper_sleep_spec())
+
+
+def test_table3_values():
+    pt = paper_power_table()
+    assert pt.num_levels == 4
+    np.testing.assert_allclose(pt.p_comp, [166, 148, 139, 126])
+    np.testing.assert_allclose(pt.beta, [1.0, 1.2, 1.5, 2.1])
+    np.testing.assert_allclose(pt.gamma, [1.0, 1.1, 1.2, 1.4])
+
+
+def test_power_table_validation():
+    with pytest.raises(ValueError):
+        PowerTable(  # ascending frequencies
+            freq_ghz=[1.2, 2.8], p_comp=[126, 166], beta=[1, 1],
+            p_ckpt=[125, 150], gamma=[1, 1],
+        )
+    with pytest.raises(ValueError):
+        PowerTable(  # beta[0] != 1
+            freq_ghz=[2.8, 1.2], p_comp=[166, 126], beta=[1.1, 2.0],
+            p_ckpt=[150, 125], gamma=[1, 1.4],
+        )
+
+
+def test_comp_time_and_energy(ladder):
+    # 600 s of work + one 120 s checkpoint, per level
+    ct = em.comp_time(600.0, 1.0, 120.0, ladder)
+    np.testing.assert_allclose(
+        ct, [600 + 120, 600 * 1.2 + 132, 600 * 1.5 + 144, 600 * 2.1 + 168], rtol=1e-6
+    )
+    ce = em.comp_energy(600.0, 1.0, 120.0, ladder)
+    np.testing.assert_allclose(ce[0], 600 * 166 + 120 * 150, rtol=1e-6)
+    np.testing.assert_allclose(ce[-1], 600 * 2.1 * 126 + 168 * 125, rtol=1e-6)
+
+
+def test_sleep_transition_constants(sleep):
+    # E_trans = 25*51 + 5*91 = 1730 J ; saving form: 154*W - 1370 (active ref)
+    np.testing.assert_allclose(sleep.transition_energy, 1730.0)
+    np.testing.assert_allclose(sleep.transition_time, 30.0)
+
+
+@pytest.mark.parametrize("wait_s", [60.0, 229.9, 1920.0, 2040.0])
+def test_sleep_saving_closed_form(ladder, sleep, wait_s):
+    """Paper Table-4 identity: sleep saving over an active wait W is
+    154*W - 1370 J for the Xeon/S3 characterization."""
+    e_awake = wait_s * 166.0
+    e_sleep = float(em.sleep_wait_energy(jnp.asarray(wait_s), sleep))
+    np.testing.assert_allclose(e_awake - e_sleep, 154.0 * wait_s - 1370.0, rtol=1e-6)
+
+
+def test_scenario2_reference_energy(ladder):
+    """ENI of scenario 2 node 1: comp 481.2 s + ckpt 120 s + wait 1920 s,
+    everything at fa with active waits => 416 599.2 J (Table 4: save
+    294 294.6 J at 70.64% => ENI ~= 416 6xx)."""
+    eni = em.reference_energy(
+        481.2, 2521.2, 1.0, 120.0, ladder, em.WaitMode.ACTIVE, 60.0
+    )
+    np.testing.assert_allclose(float(eni), 481.2 * 166 + 120 * 150 + 1920 * 166, rtol=1e-6)
+
+
+def test_intervention_energy_feasibility(ladder, sleep):
+    """Scenario 1 node 1: 2.1 GHz comp would take ~21.6 min > T_failed
+    (20.03 min) => infeasible (the paper prints 'Frequency not allowed')."""
+    out = em.intervention_energy(
+        972.0, 1202.0, 1.0, 120.0, ladder, sleep, em.WaitMode.ACTIVE, 60.0
+    )
+    feas = np.asarray(out["feasible"])
+    assert feas[0]            # fa always feasible here
+    assert not feas[1]        # 2.1 GHz: 972*1.2 + 132 = 1298.4 > 1202
+    assert not feas[2] and not feas[3]
+    assert np.isinf(np.asarray(out["total"])[1])
+
+
+def test_idle_wait_power(ladder, sleep):
+    """Idle waits draw the base power regardless of ladder level."""
+    out = em.intervention_energy(
+        100.0, 1000.0, 0.0, 120.0, ladder, sleep, em.WaitMode.IDLE, 60.0,
+        mu1=1e9,  # forbid sleep
+    )
+    wait_t = np.asarray(out["wait_t"])
+    np.testing.assert_allclose(np.asarray(out["e_wait"]), wait_t * 60.0, rtol=1e-6)
+
+
+def test_t_failed_and_recover():
+    np.testing.assert_allclose(
+        float(em.t_failed_from_recovery(2040.0, 0.25, 1924.8)), 2040.0 + 481.2
+    )
+    np.testing.assert_allclose(float(em.t_recover(60.0, 60.0, 1920.0)), 2040.0)
+
+
+def test_broadcasting_shapes(ladder, sleep):
+    """(T, N) node grids broadcast against the (F,) ladder."""
+    t_comp = jnp.ones((7, 3)) * 100.0
+    t_failed = jnp.ones((7, 3)) * 500.0
+    out = em.intervention_energy(
+        t_comp, t_failed, jnp.zeros((7, 3)), 120.0, ladder, sleep,
+        jnp.zeros((7, 3), jnp.int32), 60.0,
+    )
+    assert out["total"].shape == (7, 3, 4)

@@ -1,0 +1,203 @@
+"""FT runtime tests: checkpoint roundtrip, uncoordinated cadences,
+failure -> localized rollback -> deterministic re-execution, energy-manager
+decisions, elastic shrink, gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointConfig, PodCheckpointManager
+from repro.configs import get_smoke_config
+from repro.core import energy_model as em
+from repro.data.pipeline import SyntheticLM
+from repro.ft.runtime import (
+    ClusterSpec,
+    ElasticPlan,
+    EnergyManager,
+    FailureInjector,
+    FTTrainer,
+)
+from repro.launch.steps import make_train_step
+from repro.models import build_model
+from repro.optim.adamw import AdamWConfig, adamw
+from repro.parallel.compression import (
+    CompressionConfig,
+    int8_compress,
+    int8_decompress,
+    topk_compress,
+    topk_decompress,
+    wrap_optimizer,
+)
+
+
+@pytest.fixture(scope="module")
+def small_setup():
+    cfg = get_smoke_config("deepseek-7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw(AdamWConfig(learning_rate=1e-3))
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(model, opt))
+    pipe = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=16, global_batch=4)
+    return cfg, model, step_fn, (params, opt_state), pipe
+
+
+# ---------------------------------------------------------------------------
+# checkpoint manager
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path, small_setup):
+    _, _, step_fn, state, pipe = small_setup
+    mgr = PodCheckpointManager(CheckpointConfig(root=str(tmp_path)), pod_id=0)
+    params, opt_state = state
+    mgr.save(7, (params, opt_state))
+    step, restored = mgr.restore((params, opt_state))
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves((params, opt_state))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_gc_and_latest(tmp_path, small_setup):
+    _, _, _, state, _ = small_setup
+    mgr = PodCheckpointManager(
+        CheckpointConfig(root=str(tmp_path), keep=2, async_save=False), pod_id=1)
+    for s in (5, 10, 15):
+        mgr.save(s, state)
+    assert mgr.latest_step() == 15
+    steps = sorted(int(p.name.split("_")[1]) for p in mgr.dir.glob("step_*"))
+    assert steps == [10, 15]
+
+
+def test_uncoordinated_cadences_differ(tmp_path):
+    cfg = CheckpointConfig(root=str(tmp_path), interval_steps=100, jitter_frac=0.5)
+    offsets = {PodCheckpointManager(cfg, p)._offset for p in range(8)}
+    assert len(offsets) > 1, "pod checkpoint phases must be staggered"
+
+
+def test_restore_shape_mismatch_raises(tmp_path, small_setup):
+    _, _, _, state, _ = small_setup
+    mgr = PodCheckpointManager(
+        CheckpointConfig(root=str(tmp_path), async_save=False), pod_id=0)
+    mgr.save(1, state)
+    bad = jax.tree.map(lambda x: jnp.zeros(x.shape + (2,), x.dtype), state)
+    with pytest.raises(ValueError):
+        mgr.restore(bad)
+
+
+# ---------------------------------------------------------------------------
+# deterministic replay + trainer
+# ---------------------------------------------------------------------------
+
+def test_pipeline_is_replayable():
+    pipe = SyntheticLM(vocab_size=100, seq_len=8, global_batch=2, seed=3)
+    a = pipe.batch_at(42)
+    b = pipe.batch_at(42)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+    c = pipe.batch_at(43)
+    assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(c["tokens"]))
+
+
+def test_failure_recovery_is_deterministic(tmp_path, small_setup):
+    """The headline FT property: a run with a failure (rollback to the failed
+    pod's checkpoint + re-execution) converges to the SAME state as the
+    failure-free run, without rolling back the survivors' wall-clock work."""
+    _, _, step_fn, state0, pipe = small_setup
+    cluster = ClusterSpec(n_pods=3, step_time_s=10.0)
+    ck = CheckpointConfig(root=str(tmp_path / "a"), interval_steps=4,
+                          async_save=False, jitter_frac=0.9)
+
+    # failure-free reference
+    t_ref = FTTrainer(step_fn=step_fn, pipeline=pipe, state=state0,
+                      cluster=cluster, ckpt_cfg=CheckpointConfig(
+                          root=str(tmp_path / "b"), interval_steps=4,
+                          async_save=False),
+                      injector=FailureInjector({}))
+    t_ref.run(12)
+
+    # failed run: pod 2 dies at step 9
+    t_fail = FTTrainer(step_fn=step_fn, pipeline=pipe, state=state0,
+                       cluster=cluster, ckpt_cfg=ck,
+                       injector=FailureInjector({9: 2}))
+    t_fail.run(12)
+
+    assert len(t_fail.events) == 1
+    ev = t_fail.events[0]
+    assert ev["pod"] == 2 and ev["reexec_steps"] >= 1
+    for a, b in zip(jax.tree.leaves(t_ref.state), jax.tree.leaves(t_fail.state)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-5,
+                                   err_msg="recovery broke determinism")
+    # losses logged for re-executed steps match the reference
+    ref_losses = {h["step"]: h["loss"] for h in t_ref.history}
+    for h in t_fail.history:
+        np.testing.assert_allclose(h["loss"], ref_losses[h["step"]], rtol=1e-4)
+
+
+def test_energy_manager_decisions_scale_with_reexec(small_setup):
+    cluster = ClusterSpec(n_pods=4, step_time_s=10.0)
+    mgr = EnergyManager(cluster)
+    short = mgr.on_failure(step=10, failed_pod=0, reexec_steps=1,
+                           ckpt_ages_s=np.zeros(4), ckpt_duration_s=120.0,
+                           progress_frac=np.full(4, 0.5))
+    long = mgr.on_failure(step=10, failed_pod=0, reexec_steps=200,
+                          ckpt_ages_s=np.zeros(4), ckpt_duration_s=120.0,
+                          progress_frac=np.full(4, 0.5))
+    assert long.saving_j > short.saving_j
+    # a 2000 s wait must put survivors to sleep (paper scenario 2 regime)
+    assert all(d["wait_action"] == "SLEEP" for d in long.decisions.values())
+    assert long.saving_pct > 60.0
+
+
+def test_straggler_mitigation_uses_wait_strategies():
+    cluster = ClusterSpec(n_pods=4, step_time_s=10.0)
+    mgr = EnergyManager(cluster)
+    ev = mgr.on_straggler(step=5, slow_pod=1, delay_s=40.0,
+                          progress_frac=np.full(4, 0.2))
+    # 40 s wait: too short to sleep (mu1*30 s), min-freq for active waits
+    assert all(d["wait_action"] == "MIN_FREQ" for d in ev.decisions.values())
+    assert ev.saving_j > 0
+
+
+# ---------------------------------------------------------------------------
+# elastic + compression
+# ---------------------------------------------------------------------------
+
+def test_elastic_shrink_plan():
+    with pytest.raises(Exception):
+        ElasticPlan.shrink(jax.make_mesh((1,), ("pod",)))
+    plan = ElasticPlan(old_axes={"pod": 2, "data": 1}, new_axes={"pod": 1, "data": 1})
+    assert plan.new_axes["pod"] == 1
+
+
+def test_topk_roundtrip_preserves_largest():
+    g = jnp.asarray(np.random.default_rng(0).normal(size=(64,)).astype(np.float32))
+    kept, idx, shape = topk_compress(g, 0.25)
+    out = topk_decompress(kept, idx, shape)
+    top = np.argsort(-np.abs(np.asarray(g)))[:16]
+    np.testing.assert_allclose(np.asarray(out)[top], np.asarray(g)[top], rtol=1e-6)
+    assert float(jnp.sum(out != 0)) <= 16
+
+
+def test_int8_roundtrip_error_bound():
+    g = jnp.asarray(np.random.default_rng(1).normal(size=(128,)).astype(np.float32))
+    q, scale = int8_compress(g)
+    out = int8_decompress(q, scale)
+    assert float(jnp.max(jnp.abs(out - g))) <= float(scale) / 2 + 1e-6
+
+
+def test_error_feedback_converges():
+    """Compressed SGD with error feedback still drives a quadratic to its
+    optimum — the residual state must carry the dropped mass."""
+    from repro.optim.adamw import sgd
+    target = jnp.asarray(np.random.default_rng(2).normal(size=(32,)).astype(np.float32))
+    params = {"w": jnp.zeros(32)}
+    opt = wrap_optimizer(sgd(lr=0.1, momentum=0.0),
+                         CompressionConfig(method="topk", topk_ratio=0.125))
+    state = opt.init(params)
+
+    def grad(p):
+        return {"w": p["w"] - target}
+
+    for _ in range(400):
+        params, state = opt.update(grad(params), state, params)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target), atol=0.05)

@@ -1,0 +1,79 @@
+"""Unit tests for the trip-count-aware HLO cost walker."""
+import numpy as np
+
+from repro.launch.hlo_analysis import (
+    HloCost,
+    _group_size,
+    _shape_bytes,
+    _wire_bytes,
+    analyze_hlo,
+)
+
+TOY = """\
+HloModule jit_f, entry_computation_layout={(f32[16,1024]{1,0})->f32[]}
+
+%body (p: (s32[], f32[16,64], f32[1024,64])) -> (s32[], f32[16,64], f32[1024,64]) {
+  %p = (s32[], f32[16,64]{1,0}, f32[1024,64]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[16,64]{1,0} get-tuple-element(%p), index=1
+  %w = f32[1024,64]{1,0} get-tuple-element(%p), index=2
+  %g = f32[16,1024]{1,0} all-gather(%x), replica_groups=[16,16]<=[256], dimensions={1}
+  %d = f32[16,64]{1,0} dot(%g, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %r = f32[16,64]{1,0} all-reduce(%d), replica_groups=[64,4]<=[256], to_apply=%add
+  %t = (s32[], f32[16,64]{1,0}, f32[1024,64]{1,0}) tuple(%i, %r, %w)
+  ROOT %out = (s32[], f32[16,64]{1,0}, f32[1024,64]{1,0}) copy(%t)
+}
+
+%cond (p2: (s32[], f32[16,64], f32[1024,64])) -> pred[] {
+  %p2 = (s32[], f32[16,64]{1,0}, f32[1024,64]{1,0}) parameter(0)
+  %i2 = s32[] get-tuple-element(%p2), index=0
+  %lim = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i2, %lim), direction=LT
+}
+
+ENTRY %main (a: f32[16,1024]) -> f32[] {
+  %a = f32[16,1024]{1,0} parameter(0)
+  %t0 = (s32[], f32[16,64]{1,0}, f32[1024,64]{1,0}) tuple(%a)
+  %w0 = (s32[], f32[16,64]{1,0}, f32[1024,64]{1,0}) while(%t0), condition=%cond, body=%body
+  ROOT %s = f32[] reduce(%w0), dimensions={0,1}
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[16,64]{1,0}") == 16 * 64 * 4
+    assert _shape_bytes("bf16[8]") == 16
+    assert _shape_bytes("(s32[], f32[2,2]{1,0})") == 4 + 16
+    assert _shape_bytes("pred[]") == 1
+
+
+def test_group_size_parsing():
+    assert _group_size("replica_groups=[16,16]<=[256]") == 16
+    assert _group_size("replica_groups={{0,1,2,3}}") == 4
+    assert _group_size("no groups here") == 2
+
+
+def test_wire_bytes_model():
+    # all-reduce over k=4: 2*(3/4)*b
+    np.testing.assert_allclose(_wire_bytes("all-reduce", 100.0, 4), 150.0)
+    np.testing.assert_allclose(_wire_bytes("all-gather", 100.0, 4), 75.0)
+    np.testing.assert_allclose(_wire_bytes("reduce-scatter", 100.0, 4), 300.0)
+    assert _wire_bytes("all-reduce", 100.0, 1) == 0.0
+
+
+def test_trip_count_multiplication():
+    cost = analyze_hlo(TOY)
+    # dot: 2 * 16*64 * 1024 per iteration, 7 iterations
+    np.testing.assert_allclose(cost.flops, 2 * 16 * 64 * 1024 * 7)
+    # all-gather result 16x1024 f32, k=16 -> (15/16)*65536 B, x7
+    np.testing.assert_allclose(
+        cost.collective_bytes["all-gather"], 7 * (15 / 16) * 16 * 1024 * 4)
+    # all-reduce result 16x64 f32, k=4 -> 2*(3/4)*4096 B, x7
+    np.testing.assert_allclose(
+        cost.collective_bytes["all-reduce"], 7 * 2 * (3 / 4) * 16 * 64 * 4)
+    assert cost.collective_counts["all-gather"] == 7
+    assert cost.bytes > 0
+
+
+def test_no_entry_is_safe():
+    assert analyze_hlo("garbage text").flops == 0.0

@@ -1,0 +1,187 @@
+"""Per-architecture smoke tests (reduced configs): one forward/train step on
+CPU asserting output shapes + finiteness, decode==forward consistency, and
+family-specific behaviors (M-RoPE degeneracy, SWA masking, MoE dispatch)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_smoke_config
+from repro.launch.steps import cross_entropy, make_train_step
+from repro.models import build_model
+from repro.models import layers
+from repro.optim.adamw import AdamWConfig, adamw
+
+B, S = 2, 32
+
+
+def _batch(cfg, rng=None):
+    rng = rng or jax.random.PRNGKey(1)
+    if cfg.family == "encdec":
+        return {
+            "frames": jax.random.normal(rng, (B, cfg.encdec.enc_len, cfg.d_model)),
+            "tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab_size),
+            "labels": jax.random.randint(rng, (B, S), 0, cfg.vocab_size),
+        }
+    if cfg.embeds_input:
+        return {
+            "embeds": jax.random.normal(rng, (B, S, cfg.d_model)),
+            "labels": jax.random.randint(rng, (B, S), 0, cfg.vocab_size),
+        }
+    return {
+        "tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(rng, (B, S), 0, cfg.vocab_size),
+    }
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    logits, aux = jax.jit(model.forward)(params, _batch(cfg))
+    assert logits.shape == (B, S, cfg.padded_vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits))), f"{arch}: non-finite logits"
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw(AdamWConfig(learning_rate=1e-3))
+    opt_state = opt.init(params)
+    step = jax.jit(make_train_step(model, opt))
+    batch = _batch(cfg)
+    p1, o1, m1 = step(params, opt_state, batch)
+    assert bool(jnp.isfinite(m1["total_loss"]))
+    # a second step keeps the loss finite and changes parameters
+    p2, o2, m2 = step(p1, o1, batch)
+    assert bool(jnp.isfinite(m2["total_loss"]))
+    changed = jax.tree.leaves(
+        jax.tree.map(lambda a, b: jnp.any(a != b), params, p1))
+    assert any(bool(c) for c in changed)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-72b", "gemma-7b", "mamba2-370m",
+                                  "zamba2-7b", "mixtral-8x22b", "whisper-medium"])
+def test_decode_matches_forward(arch):
+    """Token-by-token decode must reproduce the full forward logits."""
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = jax.random.PRNGKey(7)
+    toks = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks}
+    if cfg.family == "encdec":
+        frames = jax.random.normal(rng, (B, cfg.encdec.enc_len, cfg.d_model))
+        batch["frames"] = frames
+    logits, _ = model.forward(params, batch)
+
+    cache = model.init_cache(B, S)
+    if cfg.family == "encdec":
+        from repro.models.encdec import build_encdec  # noqa: F401
+        # fill encoder output into the cache the way serving would
+        enc_logits, _ = model.forward(params, batch)  # warm path
+        import repro.models.encdec as ed
+        cache["enc_out"] = _encode_for_test(model, params, frames, cfg)
+    outs = []
+    step = jax.jit(model.decode_step)
+    for t in range(S):
+        lg, cache = step(params, cache, toks[:, t:t + 1], jnp.int32(t))
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(logits),
+                               atol=5e-3, rtol=1e-3)
+
+
+def _encode_for_test(model, params, frames, cfg):
+    """Recompute the encoder output (decode caches hold it precomputed)."""
+    from repro.models import attention as attn, mlp as mlp_lib
+    from repro.models.encdec import _ln, _sinusoids
+    x = frames.astype(cfg.activation_dtype)
+    x = x + _sinusoids(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+
+    def body(carry, lp):
+        h = carry + attn.attention(lp["attn"], _ln(carry, lp["ln1"], 1e-5),
+                                   None, cfg, causal=False)
+        h = h + mlp_lib.mlp(lp["mlp"], _ln(h, lp["ln2"], 1e-5), "gelu")
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return _ln(x, params["enc_norm"], 1e-5)
+
+
+def test_mrope_degenerates_to_rope():
+    """Text-only M-RoPE (identical ids per section) == standard RoPE."""
+    rng = jax.random.PRNGKey(0)
+    x = jax.random.normal(rng, (2, 16, 4, 16))
+    pos = jnp.broadcast_to(jnp.arange(16)[None], (2, 16))
+    mpos = jnp.broadcast_to(pos[None], (3, 2, 16))
+    a = layers.apply_rope(x, pos, 10_000.0)
+    b = layers.apply_mrope(x, mpos, 10_000.0, (4, 2, 2))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_sliding_window_masks_distant_tokens():
+    """With SWA, moving a token outside the window must not change logits
+    at query positions within the window of unchanged context."""
+    from repro.models.attention import gqa_scores_reference
+    rng = jax.random.PRNGKey(0)
+    q = jax.random.normal(rng, (1, 64, 4, 16))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 4, 16))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 64, 4, 16))
+    out = gqa_scores_reference(q, k, v, causal=True, sliding_window=8)
+    k2 = k.at[:, 0].set(99.0)   # token 0 is outside every window >= position 8
+    v2 = v.at[:, 0].set(99.0)
+    out2 = gqa_scores_reference(q, k2, v2, causal=True, sliding_window=8)
+    np.testing.assert_allclose(np.asarray(out[:, 8:]), np.asarray(out2[:, 8:]),
+                               atol=1e-5)
+    assert not np.allclose(np.asarray(out[:, :8]), np.asarray(out2[:, :8]))
+
+
+def test_moe_capacity_vs_dense_dispatch():
+    """With ample capacity the scatter-dispatch MoE must equal the dense
+    (every-expert) weighted path."""
+    from repro.models.api import MoEConfig
+    from repro.models.moe import init_moe, moe_ffn, moe_ffn_dense
+    cfg = MoEConfig(num_experts=4, top_k=2, d_ff_expert=32, capacity_factor=8.0)
+    p = init_moe(jax.random.PRNGKey(0), 16, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 16))
+    y1, aux1 = moe_ffn(p, x, cfg, "swiglu")
+    y2, aux2 = moe_ffn_dense(p, x, cfg, "swiglu")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+    np.testing.assert_allclose(float(aux1), float(aux2), rtol=1e-5)
+
+
+def test_moe_drops_tokens_at_low_capacity():
+    """capacity_factor << 1 must drop tokens (outputs become zero for some
+    tokens) without producing NaNs."""
+    from repro.models.api import MoEConfig
+    from repro.models.moe import init_moe, moe_ffn
+    cfg = MoEConfig(num_experts=4, top_k=1, d_ff_expert=32, capacity_factor=0.25)
+    p = init_moe(jax.random.PRNGKey(0), 16, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 16))
+    y, _ = moe_ffn(p, x, cfg, "swiglu")
+    assert bool(jnp.all(jnp.isfinite(y)))
+    token_norms = jnp.linalg.norm(y[0], axis=-1)
+    assert bool(jnp.any(token_norms == 0.0)), "expected dropped tokens"
+
+
+def test_cross_entropy_masking():
+    logits = jnp.zeros((1, 4, 8))
+    labels = jnp.array([[1, 2, -1, -1]])
+    loss = cross_entropy(logits, labels)
+    np.testing.assert_allclose(float(loss), np.log(8.0), rtol=1e-5)
+
+
+def test_chunked_attention_matches_reference():
+    from repro.models.attention import chunked_attention, gqa_scores_reference
+    rng = jax.random.PRNGKey(3)
+    q = jax.random.normal(rng, (2, 2048, 4, 32))
+    k = jax.random.normal(jax.random.PRNGKey(4), (2, 2048, 2, 32))
+    v = jax.random.normal(jax.random.PRNGKey(5), (2, 2048, 2, 32))
+    a = chunked_attention(q, k, v, causal=True, sliding_window=None, q_chunk=512)
+    b = gqa_scores_reference(q, k, v, causal=True, sliding_window=None)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)

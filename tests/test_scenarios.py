@@ -1,0 +1,111 @@
+"""Faithful-reproduction tests: the six simulated scenarios must reproduce
+the paper's Table 4 (actions exactly; energies within rounding tolerance).
+
+Scenario 3 is checked against our documented interpretation of the paper's
+ambiguous ladder modification (see core/scenarios.py): decisions must match
+the paper exactly (2.1 GHz + sleep) and savings stay within 2.5% of the
+published row.
+"""
+import numpy as np
+import pytest
+
+from repro.core import energy_model as em
+from repro.core.scenarios import paper_scenarios
+from repro.core.simulator import compare, simulate
+
+# (scenario, node) -> (comp_action, wait_action, save_J, save_pct)
+TABLE4 = {
+    ("scenario1_short_reexec", 1): ("No action", "1.2 GHz", 4400.00, 2.23),
+    ("scenario1_short_reexec", 2): ("No action", "sleep", 34034.60, 61.44),
+    ("scenario1_short_reexec", 3): ("No action", "sleep", 34034.60, 48.40),
+    ("scenario2_long_reexec", 1): ("No action", "sleep", 294294.60, 70.64),
+    ("scenario2_long_reexec", 2): ("No action", "sleep", 294294.60, 69.81),
+    ("scenario2_long_reexec", 3): ("No action", "sleep", 294294.60, 69.00),
+    ("scenario3_freq_behaviour_change", 1): ("2.1 GHz", "sleep", 291346.88, 70.75),
+    ("scenario3_freq_behaviour_change", 2): ("2.1 GHz", "sleep", 291448.88, 69.94),
+    ("scenario3_freq_behaviour_change", 3): ("2.1 GHz", "sleep", 291550.88, 69.15),
+    ("scenario4_short_active_waits", 1): ("1.2 GHz", "1.2 GHz", 12032.00, 24.10),
+    ("scenario4_short_active_waits", 2): ("1.7 GHz", "1.2 GHz", 9798.90, 18.12),
+    ("scenario4_short_active_waits", 3): ("1.7 GHz", "1.2 GHz", 10311.40, 17.71),
+    ("scenario5_short_idle_waits", 1): ("2.1 GHz", "No action", 56.32, 0.17),
+    ("scenario5_short_idle_waits", 2): ("2.1 GHz", "No action", 66.32, 0.18),
+    ("scenario5_short_idle_waits", 3): ("2.1 GHz", "No action", 76.32, 0.18),
+    ("scenario6_no_move_ahead", 1): ("No action", "sleep", 312774.60, 74.74),
+    ("scenario6_no_move_ahead", 2): ("No action", "sleep", 312774.60, 73.86),
+    ("scenario6_no_move_ahead", 3): ("No action", "sleep", 312774.60, 73.00),
+}
+
+# published phase durations (minutes): (comp, wait, total)
+TABLE4_PHASES = {
+    ("scenario1_short_reexec", 1): (18.20, 1.83, 20.03),
+    ("scenario2_long_reexec", 1): (10.02, 32.00, 42.02),
+    ("scenario2_long_reexec", 3): (11.02, 32.00, 43.02),
+    ("scenario4_short_active_waits", 1): (4.93, 0.09, 5.01),
+    ("scenario5_short_idle_waits", 3): (3.82, 2.03, 5.85),
+    ("scenario6_no_move_ahead", 1): (8.02, 34.00, 42.02),
+}
+
+
+@pytest.fixture(scope="module")
+def results():
+    out = {}
+    for name, cfg in paper_scenarios().items():
+        rows, ref, act = compare(cfg)
+        out[name] = {r.node: r for r in rows}
+    return out
+
+
+@pytest.mark.parametrize("key", sorted(TABLE4), ids=lambda k: f"{k[0]}-n{k[1]}")
+def test_table4_row(results, key):
+    name, node = key
+    comp_action, wait_action, save_j, save_pct = TABLE4[key]
+    row = results[name][node]
+    assert row.comp_action == comp_action, f"{key}: comp {row.comp_action}"
+    assert row.wait_action == wait_action, f"{key}: wait {row.wait_action}"
+    # scenario 3's published row is not self-consistent (see scenarios.py);
+    # everything else reproduces within instrument rounding (<0.25%).
+    rtol = 0.025 if "scenario3" in name else 0.0025
+    np.testing.assert_allclose(row.save_j, save_j, rtol=rtol)
+    assert abs(row.save_pct - save_pct) < (1.0 if "scenario3" in name else 0.15)
+
+
+@pytest.mark.parametrize("key", sorted(TABLE4_PHASES), ids=lambda k: f"{k[0]}-n{k[1]}")
+def test_table4_phase_durations(results, key):
+    comp, wait, total = TABLE4_PHASES[key]
+    row = results[key[0]][key[1]]
+    assert abs(row.comp_phase_min - comp) < 0.02
+    assert abs(row.wait_phase_min - wait) < 0.02
+    assert abs(row.total_min - total) < 0.02
+
+
+def test_intervention_never_lengthens_execution():
+    """Key paper claim: savings 'without increasing execution time'."""
+    for name, cfg in paper_scenarios().items():
+        ref = simulate(cfg, intervene=False)
+        act = simulate(cfg, intervene=True)
+        for node in ref.outcomes:
+            assert act.outcomes[node].window <= ref.outcomes[node].window + 1e-6, (
+                f"{name} node {node} window grew"
+            )
+
+
+def test_headline_claim_70pct_in_40min():
+    """Abstract: 'in an interval of around 40 minutes it is possible to
+    achieve around 70% of energy saving'."""
+    rows, _, _ = compare(paper_scenarios()["scenario2_long_reexec"])
+    for r in rows:
+        assert 40.0 < r.total_min < 45.0
+        assert 68.0 < r.save_pct < 72.0
+
+
+def test_predicted_vs_simulated_saving():
+    """Algorithm 1's analytic prediction must agree with the event-driven
+    measurement when its assumptions hold (they do in scenarios 1-6)."""
+    for name, cfg in paper_scenarios().items():
+        rows, ref, act = compare(cfg)
+        for node, o in act.outcomes.items():
+            measured = ref.outcomes[node].energy - o.energy
+            np.testing.assert_allclose(
+                o.predicted_saving, measured, rtol=5e-3, atol=2.0,
+                err_msg=f"{name} node {node}",
+            )
