@@ -1,0 +1,102 @@
+"""Failure-time sweep benchmark: the whole Table-4 grid, densely, at once.
+
+The paper evaluates one failure instant per scenario; this benchmark
+characterizes the entire failure-time distribution — 4096 failure instants x
+the six Table-4 scenarios x 3 survivors x 4 ladder levels in a single jitted
+dispatch of the sweep engine (``repro.core.sweep``) — and reports per-scenario
+distributional statistics plus Monte-Carlo expected annual savings under an
+exponential MTBF.
+
+Run:  PYTHONPATH=src python -m benchmarks.failure_sweep
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import sweep
+from repro.core.scenarios import paper_scenarios
+
+N_OFFSETS = 4096
+HORIZON_S = 7200.0          # two checkpoint intervals of failure-time diversity
+JITTER_S = 0.318            # keeps the grid off exact checkpoint boundaries
+MTBF_DAYS = 30.0
+
+
+def grid_offsets(n_offsets: int = N_OFFSETS) -> np.ndarray:
+    """The canonical failure-instant grid used by benchmark and report."""
+    return np.linspace(0.0, HORIZON_S, n_offsets, endpoint=False) + JITTER_S
+
+
+def scenario_stats(n_offsets: int = N_OFFSETS, mtbf_days: float = MTBF_DAYS) -> dict:
+    """name -> (SweepSummary, MonteCarloSummary) for the six Table-4
+    scenarios on the canonical grid.  Single definition of the experiment —
+    benchmarks/run.py rows and benchmarks/report.py tables both read this."""
+    cfgs = paper_scenarios()
+    res = sweep.sweep_scenarios(list(cfgs.values()), grid_offsets(n_offsets))
+    out = {}
+    for s, (name, cfg) in enumerate(cfgs.items()):
+        summ = sweep.summarize(jax.tree.map(lambda a, s=s: a[s], res))
+        mc = sweep.monte_carlo(cfg, jax.random.PRNGKey(0), n_samples=n_offsets,
+                               mtbf_s=mtbf_days * 24 * 3600.0)
+        out[name] = (summ, mc)
+    return out
+
+
+def run() -> list:
+    cfg_list = list(paper_scenarios().values())
+    offsets = grid_offsets()
+
+    # one jitted dispatch for the full (scenario x failure-time x node) grid
+    res = sweep.sweep_scenarios(cfg_list, offsets)
+    jax.block_until_ready(res.decision.saving)
+    t0 = time.perf_counter()
+    res = sweep.sweep_scenarios(cfg_list, offsets)
+    jax.block_until_ready(res.decision.saving)
+    dt = time.perf_counter() - t0
+
+    n_decisions = int(np.prod(res.decision.saving.shape))
+    rows = [{
+        "name": f"failure_sweep/grid_{len(cfg_list)}x{N_OFFSETS}x3",
+        "us_per_call": dt * 1e6,
+        "decisions_per_s": n_decisions / dt,
+        "derived": f"{n_decisions / dt:.3e}dec/s",
+    }]
+
+    stats = scenario_stats()
+    for name, (summ, _) in stats.items():
+        rows.append({
+            "name": f"failure_sweep/{name}",
+            "us_per_call": 0.0,
+            "decisions_per_s": 0.0,
+            "derived": (
+                f"save%mean={summ.mean_saving_pct:.1f}"
+                f"_p5={summ.p5_saving_j / 1e3:.1f}kJ"
+                f"_p95={summ.p95_saving_j / 1e3:.1f}kJ"
+                f"_sleep={summ.sleep_occupancy:.2f}"
+                f"_infeas={summ.infeasible_rate:.3f}"
+            ),
+        })
+    for name, (_, mc) in stats.items():
+        rows.append({
+            "name": f"failure_sweep/mc_{name}",
+            "us_per_call": 0.0,
+            "decisions_per_s": 0.0,
+            "derived": (
+                f"annual={mc.annual_saving_j / 3.6e6:.2f}kWh"
+                f"_mean={mc.mean_saving_j / 1e3:.0f}kJ/failure"
+                f"_sleep={mc.sleep_occupancy:.2f}"
+            ),
+        })
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,9 @@
-"""Generate the EXPERIMENTS.md §Dry-run/§Roofline tables from artifacts.
+"""Generate the EXPERIMENTS.md §Dry-run/§Roofline/§Failure-sweep tables.
 
-Usage: PYTHONPATH=src python -m benchmarks.report > /tmp/roofline.md
+Dry-run and roofline sections read committed artifacts; the failure-sweep
+section evaluates the analytic sweep engine live (seconds on CPU).
+
+Usage: PYTHONPATH=src python -m benchmarks.report > /tmp/report.md
 """
 from __future__ import annotations
 
@@ -69,6 +72,29 @@ def dryrun_table(mesh: str) -> str:
     return "\n".join(out)
 
 
+def failure_sweep_table(n_offsets: int = 4096, mtbf_days: float = 30.0) -> str:
+    """Distribution of savings over the failure-time axis, per scenario —
+    the sweep-engine view the paper's single-instant Table 4 cannot give.
+    The experiment itself is defined once in benchmarks/failure_sweep.py."""
+    from benchmarks.failure_sweep import scenario_stats
+
+    out = [
+        f"### Failure-time sweep — {n_offsets} instants/scenario, "
+        f"MTBF {mtbf_days:g} d for Monte-Carlo",
+        "",
+        "| scenario | mean save % | p5 save | p95 save | sleep occ. | "
+        "infeasible | E[annual] |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for name, (summ, mc) in scenario_stats(n_offsets, mtbf_days).items():
+        out.append(
+            f"| {name} | {summ.mean_saving_pct:.1f} | "
+            f"{summ.p5_saving_j / 1e3:.1f} kJ | {summ.p95_saving_j / 1e3:.1f} kJ | "
+            f"{summ.sleep_occupancy:.2f} | {summ.infeasible_rate:.3f} | "
+            f"{mc.annual_saving_j / 3.6e6:.2f} kWh |")
+    return "\n".join(out)
+
+
 def main():
     print("## Dry-run records\n")
     for mesh in ("single", "multi"):
@@ -80,6 +106,9 @@ def main():
     for mesh in ("single", "multi"):
         print(roofline_table(mesh))
         print()
+    print("## Failure sweep\n")
+    print(failure_sweep_table())
+    print()
 
 
 if __name__ == "__main__":

@@ -4,6 +4,7 @@ Prints ``name,us_per_call,derived`` CSV rows per the harness contract.
   table3  — characterization (paper Table 3)
   table4  — the six scenarios (paper Table 4), ours vs published
   strategy_throughput — vectorized Algorithm-1 engine (beyond-paper scale)
+  failure_sweep — dense failure-time grid + Monte-Carlo (core/sweep.py)
   ft_overhead — checkpoint save/restore + recovery path timings
   roofline — per (arch x shape x mesh) terms from the dry-run artifacts
 """
@@ -37,6 +38,10 @@ def main() -> None:
     from benchmarks import strategy_throughput
     for r in strategy_throughput.run():
         _emit(r["name"], r["us_per_call"], f"{r['decisions_per_s']:.3e}dec/s")
+
+    from benchmarks import failure_sweep
+    for r in failure_sweep.run():
+        _emit(r["name"], r["us_per_call"], r["derived"])
 
     from benchmarks import ft_overhead
     for r in ft_overhead.run():

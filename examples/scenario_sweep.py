@@ -1,31 +1,44 @@
-"""Failure-time sweep: how savings depend on when the failure lands
-(paper §3.1 motivation: 'the further from the last checkpoint, the longer
-the re-execution'), plus Monte-Carlo strategy maps over the (T_comp,
-T_recover) plane using the vectorized engine.
+"""Failure-time sweeps on the batched analytic engine (core/sweep.py).
+
+The paper simulates each scenario at one failure instant; its conclusion
+asks for "the behavior of an application under different configurations and
+failure time".  This example answers that with three views, all computed by
+the jitted sweep engine instead of stepping the event simulator per point:
+
+  1. savings vs failure time for scenario 2 — a dense 512-instant curve;
+  2. the strategy map over the (T_comp, T_recover) plane (vectorized
+     Algorithm 1, as before);
+  3. Monte-Carlo expected annual savings per scenario under a 30-day MTBF.
 
 Run:  PYTHONPATH=src python examples/scenario_sweep.py
 """
+import jax
 import numpy as np
 
 from repro.core import WaitMode, evaluate_strategies_profile, paper_machine_profile
-from repro.core.simulator import NodeStart, ScenarioConfig, compare
+from repro.core import monte_carlo, summarize, sweep_failure_times
+from repro.core.scenarios import paper_scenarios
 
 profile = paper_machine_profile()
+scenarios = paper_scenarios()
 
 print("=" * 72)
-print("1. Sweep: failure at increasing distance from the last checkpoint")
-print("   (event simulator; node blocks 5 min of work after the failure)")
+print("1. Savings vs failure time — scenario 2, 512 instants, one jitted call")
+print("   (x: failure instant within 2 checkpoint intervals; each char = 16")
+print("   instants; height ~ mean survivor saving)")
 print("=" * 72)
-print(f"{'re-exec (min)':>14} | {'wait action':>11} | {'saving (kJ)':>11} | save %")
-for reexec_min in (1, 5, 10, 20, 40):
-    cfg = ScenarioConfig(
-        name=f"sweep_{reexec_min}",
-        survivors=(NodeStart(exec_to_rendezvous=300.0, ckpt_age=60.0),),
-        t_down=60.0, t_restart=60.0, t_reexec=reexec_min * 60.0)
-    rows, _, _ = compare(cfg)
-    r = rows[0]
-    print(f"{reexec_min:>14} | {r.wait_action:>11} | {r.save_j / 1e3:>11.1f} | "
-          f"{r.save_pct:.1f}%")
+offsets = np.linspace(0.0, 7200.0, 512, endpoint=False) + 0.318
+res = sweep_failure_times(scenarios["scenario2_long_reexec"], offsets)
+saving = np.asarray(res.decision.saving).mean(axis=1)          # (T,)
+buckets = saving.reshape(32, 16).mean(axis=1)
+scale = buckets.max()
+bars = " .:-=+*#%@"
+print("   " + "".join(bars[int(b / scale * (len(bars) - 1))] for b in buckets))
+print(f"   min {saving.min() / 1e3:.1f} kJ   mean {saving.mean() / 1e3:.1f} kJ"
+      f"   max {saving.max() / 1e3:.1f} kJ")
+summ = summarize(res)
+print(f"   sleep occupancy {summ.sleep_occupancy:.0%}, "
+      f"infeasible {summ.infeasible_rate:.1%} of instants")
 
 print()
 print("=" * 72)
@@ -44,3 +57,15 @@ for row in actions[::4]:
     print("   " + "".join(glyph[int(a)] for a in row))
 mean_save = float(np.mean(np.asarray(d.saving_pct)))
 print(f"\n   mean saving over the plane: {mean_save:.1f}%")
+
+print()
+print("=" * 72)
+print("3. Monte-Carlo: expected annual savings per scenario (MTBF 30 days,")
+print("   4096 exponential failure draws, fixed PRNG key)")
+print("=" * 72)
+print(f"{'scenario':>34} | {'E[save]/failure':>15} | {'annual':>9} | sleep occ.")
+for name, cfg in scenarios.items():
+    mc = monte_carlo(cfg, jax.random.PRNGKey(0), n_samples=4096,
+                     mtbf_s=30 * 24 * 3600.0)
+    print(f"{name:>34} | {mc.mean_saving_j / 1e3:>12.0f} kJ | "
+          f"{mc.annual_saving_j / 3.6e6:>5.2f} kWh | {mc.sleep_occupancy:.0%}")

@@ -9,8 +9,22 @@ from repro.core.characterization import (
     tpu_v5e_like_profile,
 )
 from repro.core.energy_model import LadderArrays, SleepArrays, WaitAction, WaitMode
-from repro.core.planning import expected_savings, optimal_checkpoint_interval
+from repro.core.planning import (
+    advance_checkpoint_sawtooth,
+    checkpoint_plan,
+    expected_savings,
+    optimal_checkpoint_interval,
+)
 from repro.core.strategies import Decision, evaluate_strategies, evaluate_strategies_profile
+from repro.core.sweep import (
+    MonteCarloSummary,
+    SweepResult,
+    SweepSummary,
+    monte_carlo,
+    summarize,
+    sweep_failure_times,
+    sweep_scenarios,
+)
 
 __all__ = [
     "MachineProfile",
@@ -29,4 +43,13 @@ __all__ = [
     "evaluate_strategies_profile",
     "expected_savings",
     "optimal_checkpoint_interval",
+    "advance_checkpoint_sawtooth",
+    "checkpoint_plan",
+    "MonteCarloSummary",
+    "SweepResult",
+    "SweepSummary",
+    "monte_carlo",
+    "summarize",
+    "sweep_failure_times",
+    "sweep_scenarios",
 ]

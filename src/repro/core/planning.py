@@ -19,7 +19,7 @@ paper's model (all in vectorized JAX, reusing the Algorithm-1 engine):
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +29,138 @@ from repro.core import energy_model as em
 from repro.core import strategies
 from repro.core.characterization import MachineProfile
 
-__all__ = ["ExpectedSavings", "expected_savings", "optimal_checkpoint_interval"]
+__all__ = [
+    "ExpectedSavings",
+    "CheckpointPlan",
+    "advance_checkpoint_sawtooth",
+    "checkpoint_plan",
+    "expected_savings",
+    "optimal_checkpoint_interval",
+]
+
+
+def _ns(*arrays):
+    """numpy/jnp namespace dispatch: jnp iff any input is a jax array (incl.
+    tracers), so the same closed forms serve the float64 event-simulator path
+    and the jitted sweep engine."""
+    return jnp if any(isinstance(a, jax.Array) for a in arrays) else np
+
+
+# ---------------------------------------------------------------------------
+# analytic phase geometry (shared by simulator.py and sweep.py)
+# ---------------------------------------------------------------------------
+
+def advance_checkpoint_sawtooth(age0, delta, interval, dur):
+    """Advance a timer-checkpoint sawtooth by ``delta`` wall seconds.
+
+    Pre-failure execution model (paper §4.1): the node executes at fa and a
+    transparent timer checkpoint of duration ``dur`` fires whenever the wall
+    age since the last checkpoint end reaches ``interval``.  Closed form — no
+    event stepping — and broadcastable over any batch shape.
+
+    Failure instants landing strictly inside a checkpoint are snapped forward
+    to that checkpoint's end (age 0): the simulator state ``(exec_rem,
+    ckpt_age)`` cannot represent a half-written checkpoint, and an FT runtime
+    quiesces control decisions during a checkpoint anyway.  ``delta_eff``
+    reports the possibly-snapped instant.
+
+    Returns ``(age, work, n_fired, delta_eff)``:
+      age       wall seconds since the last checkpoint end at ``delta_eff``
+      work      fa-seconds of execution completed in ``[0, delta_eff]``
+      n_fired   checkpoints completed in ``[0, delta_eff]``
+      delta_eff the evaluated failure instant (``>= delta``, ``< delta + dur``)
+    """
+    xp = _ns(age0, delta, interval, dur)
+    age0, delta = xp.asarray(age0), xp.asarray(delta)
+    first = interval - age0                 # wall time of the first timer fire
+    period = interval + dur
+    fired = delta >= first
+    q = xp.maximum(delta - first, 0.0)
+    j = xp.floor(q / period)                # index of the last fire <= delta
+    r = q - j * period                      # time since that fire began
+    mid = fired & (r < dur)                 # failure lands inside a checkpoint
+    n_fired = xp.where(fired, j + 1.0, 0.0)
+    age = xp.where(fired, xp.where(mid, 0.0, r - dur), age0 + delta)
+    delta_eff = xp.where(mid, first + j * period + dur, delta)
+    work = delta_eff - n_fired * dur
+    return age, work, n_fired, delta_eff
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointPlan:
+    """Decision-time checkpoint forecast for the intervention interval.
+
+    ``n_timer``/``n_ckpt`` carry a trailing ladder axis (..., F); the rest
+    share the node batch shape.  ``n_ckpt = n_timer + planned move-ahead``.
+    """
+
+    n_timer: Any           # timer checkpoints during the (stretched) compute phase
+    n_ckpt: Any            # + the planned move-ahead checkpoint
+    plan_move: Any         # bool: move-ahead checkpoint planned at block time
+    age_at_block_fa: Any   # checkpoint age when blocking (fa timeline)
+    wait_at_block_fa: Any  # wait duration at block (fa timeline)
+
+
+def checkpoint_plan(
+    exec_rem,
+    age,
+    t_failed,
+    *,
+    interval,
+    dur,
+    beta,
+    gamma,
+    move_ahead,
+    move_frac,
+    eps: float = 1e-9,
+):
+    """Closed-form checkpoint plan, identical to the event engine's timers.
+
+    Per (node, ladder level): timer ``k`` fires at wall ``(interval - age) +
+    k*(interval + dur*gamma_l)`` and pushes the block time by ``dur*gamma_l``;
+    the count of fires before the block admits the closed form
+
+        n_timer = max(0, ceil((exec_rem*beta_l + age - interval)/interval))
+
+    (the checkpoint-duration terms cancel).  The move-ahead is FT policy
+    decided once on the un-stretched fa timeline — paper §4.1: checkpoint
+    before blocking if the last checkpoint is older than ``move_frac *
+    interval`` and the wait is long enough to fit it.
+
+    Inputs broadcast over any node batch shape; ``beta``/``gamma`` are the
+    (F,) ladder arrays.  Works on numpy float64 (event simulator) and traced
+    jnp float32 (sweep engine) alike.
+    """
+    xp = _ns(exec_rem, age, t_failed, beta)
+    exec_rem, age, t_failed = (xp.asarray(a) for a in (exec_rem, age, t_failed))
+    n_timer = xp.maximum(
+        0.0,
+        xp.ceil((exec_rem[..., None] * beta + age[..., None] - interval) / interval
+                - eps),
+    )
+    n0 = n_timer[..., 0]
+    wait_at_block_fa = t_failed - (exec_rem + n0 * dur)
+    # age at block: if a timer fired during the compute phase the age restarts
+    # from its end.
+    last_timer_end = xp.where(
+        n0 > 0,
+        (interval - age) + (n0 - 1.0) * (interval + dur) + dur,
+        -age,
+    )
+    age_at_block_fa = exec_rem + n0 * dur - last_timer_end
+    plan_move = (
+        xp.asarray(move_ahead, bool)
+        & (age_at_block_fa > move_frac * interval)
+        & (wait_at_block_fa > dur)
+    )
+    n_ckpt = n_timer + xp.where(plan_move, 1.0, 0.0)[..., None]
+    return CheckpointPlan(
+        n_timer=n_timer,
+        n_ckpt=n_ckpt,
+        plan_move=plan_move,
+        age_at_block_fa=age_at_block_fa,
+        wait_at_block_fa=wait_at_block_fa,
+    )
 
 
 @dataclasses.dataclass(frozen=True)

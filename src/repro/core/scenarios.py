@@ -26,6 +26,7 @@ import dataclasses
 import numpy as np
 
 from repro.core import energy_model as em
+from repro.core import planning
 from repro.core.characterization import (
     MachineProfile,
     PowerTable,
@@ -33,7 +34,13 @@ from repro.core.characterization import (
 )
 from repro.core.simulator import NodeStart, ScenarioConfig
 
-__all__ = ["paper_scenarios", "scenario"]
+__all__ = [
+    "paper_scenarios",
+    "scenario",
+    "FailureState",
+    "failure_state_at",
+    "shift_failure",
+]
 
 
 def _scenario3_profile() -> MachineProfile:
@@ -97,3 +104,111 @@ def paper_scenarios() -> dict:
 def scenario(index: int) -> ScenarioConfig:
     """Scenario by paper number (1-6)."""
     return list(paper_scenarios().values())[index - 1]
+
+
+# ---------------------------------------------------------------------------
+# analytic failure-instant shifting (substrate of core/sweep.py)
+# ---------------------------------------------------------------------------
+
+def _check_ages(age0: np.ndarray, t_reexec: float, interval: float) -> None:
+    """The checkpoint sawtooth assumes no node starts with an *overdue*
+    timer (age > interval): the closed form would place the overdue
+    checkpoint in the past and return negative work.  Such configs are
+    ill-posed for the event simulator too (its timer would fire at a
+    negative timestamp)."""
+    if np.any(age0 > interval) or t_reexec > interval:
+        raise ValueError(
+            "ckpt_age / t_reexec exceed ckpt_interval: a node cannot be "
+            f"older than one timer period (ages {age0.tolist()}, "
+            f"t_reexec {t_reexec}, interval {interval})"
+        )
+
+@dataclasses.dataclass(frozen=True)
+class FailureState:
+    """Per-node pre-failure state when the failure lands ``delta`` wall
+    seconds after a scenario's reference instant.  All arrays are float64,
+    shape (N,) over survivors unless noted."""
+
+    delta: float               # requested shift (wall seconds)
+    exec_rem: np.ndarray       # fa-seconds of work to each survivor's next rendezvous
+    ckpt_age: np.ndarray       # wall seconds since each survivor's last checkpoint end
+    delta_eff: np.ndarray      # per-node snapped instant (see advance_checkpoint_sawtooth)
+    t_reexec: float            # failed node's lost work = re-execution time at fa
+    t_recover: float           # T_down + T_restart + t_reexec  (eq. 15)
+
+
+def failure_state_at(cfg: ScenarioConfig, delta: float) -> FailureState:
+    """Advance a scenario's pre-failure timeline by ``delta`` wall seconds.
+
+    A ``ScenarioConfig`` is a snapshot of the system at one failure instant
+    (the paper simulates exactly that instant).  Before the failure every
+    process executes at fa with timer checkpoints every ``ckpt_interval``
+    (paper §4.1) and rendezvous every ``rendezvous_period`` fa-seconds of
+    work, completing instantly while all peers are alive (balanced app — the
+    paper's waits arise only from the failure).  Both sawtooths admit closed
+    forms, so the state at any later failure instant is analytic:
+
+      * survivor ``i``:  ``ckpt_age`` advances/wraps on the checkpoint
+        sawtooth; ``exec_rem`` decreases by the work done and wraps on the
+        rendezvous period (remaining work in ``(0, period]``);
+      * the failed node: its lost work ``t_reexec`` follows the same sawtooth
+        (at fa, work since the last checkpoint equals the wall age).
+
+    Per-node failure instants snap forward past in-progress checkpoints
+    (``delta_eff``), keeping every state representable as a ``NodeStart``.
+    """
+    if delta < 0:
+        raise ValueError("delta must be >= 0")
+    exec0 = np.array([s.exec_to_rendezvous for s in cfg.survivors], np.float64)
+    period = np.array([s.rendezvous_period for s in cfg.survivors], np.float64)
+    age0 = np.array([s.ckpt_age for s in cfg.survivors], np.float64)
+    _check_ages(age0, cfg.t_reexec, cfg.ckpt_interval)
+    age, work, _, delta_eff = planning.advance_checkpoint_sawtooth(
+        age0, np.float64(delta), cfg.ckpt_interval, cfg.ckpt_duration
+    )
+    rem = np.mod(exec0 - work, period)
+    exec_rem = np.where(rem == 0.0, period, rem)
+    # failed node: age == lost work at fa between checkpoints
+    reexec, _, _, _ = planning.advance_checkpoint_sawtooth(
+        np.float64(cfg.t_reexec), np.float64(delta),
+        cfg.ckpt_interval, cfg.ckpt_duration,
+    )
+    t_reexec = float(reexec)
+    return FailureState(
+        delta=float(delta),
+        exec_rem=exec_rem,
+        ckpt_age=age,
+        delta_eff=np.asarray(delta_eff, np.float64),
+        t_reexec=t_reexec,
+        t_recover=cfg.t_down + cfg.t_restart + t_reexec,
+    )
+
+
+def shift_failure(cfg: ScenarioConfig, delta: float) -> ScenarioConfig:
+    """A ``ScenarioConfig`` whose failure lands ``delta`` seconds later.
+
+    The returned config feeds the event simulator directly, which is how
+    ``tests/test_sweep.py`` cross-validates the analytic sweep engine
+    pointwise.  Chained survivors (``peer != 0``) are rejected when the shift
+    breaks the progress ordering the chain requires.
+    """
+    st = failure_state_at(cfg, delta)
+    for i, sv in enumerate(cfg.survivors):
+        if sv.peer != 0 and st.exec_rem[i] <= st.exec_rem[sv.peer - 1]:
+            raise ValueError(
+                f"shift {delta}: chained survivor {i + 1} wrapped past its peer"
+            )
+    survivors = tuple(
+        dataclasses.replace(
+            sv,
+            exec_to_rendezvous=float(st.exec_rem[i]),
+            ckpt_age=float(st.ckpt_age[i]),
+        )
+        for i, sv in enumerate(cfg.survivors)
+    )
+    return dataclasses.replace(
+        cfg,
+        name=f"{cfg.name}@+{delta:g}s",
+        survivors=survivors,
+        t_reexec=st.t_reexec,
+    )

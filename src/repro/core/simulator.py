@@ -43,6 +43,7 @@ from typing import Callable, Optional
 import numpy as np
 
 from repro.core import energy_model as em
+from repro.core import planning
 from repro.core import strategies
 from repro.core.characterization import MachineProfile, paper_machine_profile
 
@@ -240,44 +241,20 @@ def simulate(cfg: ScenarioConfig, intervene: bool) -> SimResult:
     # Per (node, level) checkpoint plan: timer checkpoints that will fire
     # during the (stretched) compute phase plus a planned move-ahead at
     # block time.  Planning at decision time keeps Algorithm 1's feasibility
-    # check and the executed timeline coherent.
-    F = pt.num_levels
-    n_timer = np.zeros((n_survivors, F))
-    for i in range(n_survivors):
-        for l in range(F):
-            beta, gamma = float(pt.beta[l]), float(pt.gamma[l])
-            dur = cfg.ckpt_duration * gamma
-            # timer k fires at wall (interval - age) + k*(interval + dur);
-            # each firing pushes the block time by dur.
-            n = 0
-            t_timer = cfg.ckpt_interval - ages[i]
-            block_wall = exec_rem[i] * beta
-            while t_timer < block_wall - 1e-9:
-                n += 1
-                block_wall += dur
-                t_timer += cfg.ckpt_interval + dur
-            n_timer[i, l] = n
-    # The move-ahead is FT policy, decided once from the un-stretched (fa)
-    # timeline and applied at every candidate level (the paper's Algorithm 1
-    # likewise uses one N_ckpt for all frequencies): levels that cannot fit
-    # exec + checkpoint before T_failed are simply infeasible.
-    wait_at_block_fa = t_failed - (exec_rem + n_timer[:, 0] * cfg.ckpt_duration)
-    # age at block: if a timer checkpoint fired during the compute phase the
-    # age restarts from its end.
-    last_timer_end_offset = np.where(
-        n_timer[:, 0] > 0,
-        (cfg.ckpt_interval - ages)
-        + (n_timer[:, 0] - 1) * (cfg.ckpt_interval + cfg.ckpt_duration)
-        + cfg.ckpt_duration,
-        -ages,
+    # check and the executed timeline coherent.  The move-ahead is FT policy,
+    # decided once from the un-stretched (fa) timeline and applied at every
+    # candidate level (the paper's Algorithm 1 likewise uses one N_ckpt for
+    # all frequencies): levels that cannot fit exec + checkpoint before
+    # T_failed are simply infeasible.  The closed form lives in planning.py
+    # so the batched sweep engine and this event engine share one plan.
+    plan = planning.checkpoint_plan(
+        exec_rem, ages, t_failed,
+        interval=cfg.ckpt_interval, dur=cfg.ckpt_duration,
+        beta=pt.beta, gamma=pt.gamma,
+        move_ahead=cfg.move_ahead, move_frac=cfg.move_ahead_frac,
     )
-    age_at_block_fa = exec_rem + n_timer[:, 0] * cfg.ckpt_duration - last_timer_end_offset
-    plan_move = (
-        cfg.move_ahead
-        & (age_at_block_fa > cfg.move_ahead_frac * cfg.ckpt_interval)
-        & (wait_at_block_fa > cfg.ckpt_duration)
-    )
-    n_ckpt = n_timer + plan_move[:, None].astype(np.float64)
+    plan_move = plan.plan_move
+    n_ckpt = plan.n_ckpt
 
     if intervene:
         decision = strategies.evaluate_strategies_profile(

@@ -99,7 +99,12 @@ def evaluate_strategies(
         p_idle_wait, mu1=mu1, mu2=mu2, per_level_n_ckpt=per_level_n_ckpt,
     )
     level = jnp.argmin(ei["total"], axis=-1)
-    take = lambda a: jnp.take_along_axis(a, level[..., None], axis=-1)[..., 0]
+    # per-level arrays may carry fewer batch dims than the selection (e.g. a
+    # leading mu-band axis enters only through the sleep gate): broadcast up
+    # before gathering.
+    take = lambda a: jnp.take_along_axis(
+        jnp.broadcast_to(a, level.shape + a.shape[-1:]), level[..., None], axis=-1
+    )[..., 0]
 
     n_ckpt_ref = n_ckpt[..., 0] if per_level_n_ckpt else n_ckpt
     eni = em.reference_energy(

@@ -1,0 +1,445 @@
+"""Batched Monte-Carlo failure-sweep engine.
+
+The paper evaluates each scenario at a *single* failure instant (§4, Table 4);
+its conclusion calls for analyzing "the behavior of an application under
+different configurations and failure time".  This module is that path: one
+jitted JAX program evaluates Algorithm 1 over a dense grid of
+
+    failure_time x scenario x wait_mode x mu-band x ladder level
+
+by deriving every survivor's pre-failure state *analytically* from a
+``ScenarioConfig`` at each failure instant — no Python event stepping:
+
+  * ``planning.advance_checkpoint_sawtooth`` gives each node's checkpoint age
+    and completed work at any shifted instant in closed form;
+  * the rendezvous phase wraps on each survivor's period;
+  * the failed node's lost work (= re-execution time at fa) follows the same
+    sawtooth, so ``T_failed`` (eq. 14/15) is analytic per instant;
+  * ``planning.checkpoint_plan`` forecasts per-(node, level) checkpoint
+    counts and the move-ahead exactly as the event engine executes them;
+  * ``strategies.evaluate_strategies`` (Algorithm 1) runs once over the whole
+    grid — everything broadcasts, as promised in strategies.py.
+
+``tests/test_sweep.py`` cross-validates the analytic per-point savings
+against the event simulator on every Table-4 scenario; the two paths share
+the closed-form plan, so agreement is a real check of the energy accounting,
+not a tautology.
+
+On top of the dense grid sit exponential-MTBF Monte-Carlo sampling
+(``monte_carlo``: expected annual savings per strategy under a fixed PRNG
+key) and summary statistics (``summarize``: mean/p5/p95 saving, sleep-gate
+occupancy, infeasibility rate).
+
+Semantics notes (also in docs/sweep.md):
+  * failure instants landing inside a node's checkpoint snap forward to the
+    checkpoint's end (per node) — see ``advance_checkpoint_sawtooth``;
+  * pre-failure rendezvous complete instantly (balanced application — the
+    paper's waits arise only from the failure);
+  * chained survivors (``peer != 0``) are evaluated with ``T_failed`` =
+    peer completion + progress delta; instants where the shift breaks the
+    chain's progress ordering are flagged in ``chain_ok`` and their savings
+    are not meaningful.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import energy_model as em
+from repro.core import planning
+from repro.core import strategies
+from repro.core.simulator import ScenarioConfig
+
+__all__ = [
+    "SweepInputs",
+    "SweepResult",
+    "SweepSummary",
+    "MonteCarloSummary",
+    "sweep_inputs",
+    "sweep_failure_times",
+    "sweep_scenarios",
+    "summarize",
+    "exponential_failure_offsets",
+    "monte_carlo",
+]
+
+SECONDS_PER_YEAR = 365.25 * 24 * 3600.0
+
+
+# ---------------------------------------------------------------------------
+# inputs: a ScenarioConfig flattened to arrays (vmap-able across scenarios)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SweepInputs:
+    """Device-array view of a ``ScenarioConfig`` for the sweep engine.
+
+    All fields are jnp scalars / arrays (pytree leaves) except ``peer``,
+    which is static structure (the blocking topology).  Scenario batches are
+    built by stacking pytrees — every scenario in a batch must share the
+    survivor count, ladder size, and blocking topology.
+    """
+
+    exec_rem0: jax.Array    # (N,) fa-seconds to each survivor's next rendezvous
+    period: jax.Array       # (N,) rendezvous period (fa-seconds of work)
+    age0: jax.Array         # (N,) wall seconds since last checkpoint end
+    reexec0: jax.Array      # ()  failed node's lost work at the reference instant
+    t_down: jax.Array       # ()
+    t_restart: jax.Array    # ()
+    interval: jax.Array     # ()  checkpoint timer interval (wall s)
+    dur: jax.Array          # ()  checkpoint duration at fa (wall s)
+    move_ahead: jax.Array   # ()  bool
+    move_frac: jax.Array    # ()
+    wait_mode: jax.Array    # ()  em.WaitMode
+    mu1: jax.Array          # ()  sleep-gate margin (eq. 8)
+    mu2: jax.Array          # ()
+    p_idle_wait: jax.Array  # ()
+    ladder: em.LadderArrays
+    sleep: em.SleepArrays
+    peer: tuple             # static: (N,) blocking topology, 0 = failed process
+
+
+jax.tree_util.register_dataclass(
+    SweepInputs,
+    data_fields=[
+        "exec_rem0", "period", "age0", "reexec0", "t_down", "t_restart",
+        "interval", "dur", "move_ahead", "move_frac", "wait_mode", "mu1",
+        "mu2", "p_idle_wait", "ladder", "sleep",
+    ],
+    meta_fields=["peer"],
+)
+
+
+def sweep_inputs(cfg: ScenarioConfig) -> SweepInputs:
+    """Flatten a ``ScenarioConfig`` into sweep-engine arrays."""
+    ages = [s.ckpt_age for s in cfg.survivors]
+    if max(ages, default=0.0) > cfg.ckpt_interval or cfg.t_reexec > cfg.ckpt_interval:
+        # the sawtooth closed form assumes no node starts with an overdue
+        # timer (the event simulator would fire it at a negative timestamp)
+        raise ValueError(
+            f"{cfg.name}: ckpt_age/t_reexec exceed ckpt_interval "
+            f"(ages {ages}, t_reexec {cfg.t_reexec}, interval {cfg.ckpt_interval})"
+        )
+    f32 = lambda x: jnp.asarray(x, jnp.float32)
+    return SweepInputs(
+        exec_rem0=f32([s.exec_to_rendezvous for s in cfg.survivors]),
+        period=f32([s.rendezvous_period for s in cfg.survivors]),
+        age0=f32([s.ckpt_age for s in cfg.survivors]),
+        reexec0=f32(cfg.t_reexec),
+        t_down=f32(cfg.t_down),
+        t_restart=f32(cfg.t_restart),
+        interval=f32(cfg.ckpt_interval),
+        dur=f32(cfg.ckpt_duration),
+        move_ahead=jnp.asarray(cfg.move_ahead),
+        move_frac=f32(cfg.move_ahead_frac),
+        wait_mode=jnp.asarray(int(cfg.wait_mode), jnp.int32),
+        mu1=f32(cfg.mu1),
+        mu2=f32(cfg.mu2),
+        p_idle_wait=f32(cfg.profile.p_idle_wait),
+        ladder=em.LadderArrays.from_table(cfg.profile.power_table),
+        sleep=em.SleepArrays.from_spec(cfg.profile.sleep),
+        peer=tuple(s.peer for s in cfg.survivors),
+    )
+
+
+# ---------------------------------------------------------------------------
+# the grid evaluation (one jitted program)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SweepResult:
+    """Per-grid-point decisions + geometry.
+
+    Leading batch shape is ``(T, N)`` for a plain failure-time sweep —
+    ``(M, T, N)`` with a mu-band, ``(S, T, N)`` for stacked scenarios
+    (``decision`` fields only; geometry stays mu-independent at ``(T, N)``).
+    """
+
+    decision: strategies.Decision
+    exec_rem: jax.Array     # (T, N) work to rendezvous at the failure instant
+    ckpt_age: jax.Array     # (T, N)
+    delta_eff: jax.Array    # (T, N) per-node snapped failure instant
+    t_reexec: jax.Array     # (T,)
+    t_failed: jax.Array     # (T, N) eq. 14
+    n_ckpt: jax.Array       # (T, N, F) planned checkpoints per ladder level
+    plan_move: jax.Array    # (T, N) move-ahead planned
+    chain_ok: jax.Array     # (T, N) chained-rendezvous ordering holds
+
+
+jax.tree_util.register_dataclass(
+    SweepResult,
+    data_fields=[
+        "decision", "exec_rem", "ckpt_age", "delta_eff", "t_reexec",
+        "t_failed", "n_ckpt", "plan_move", "chain_ok",
+    ],
+    meta_fields=[],
+)
+
+
+def _sweep_core(inp: SweepInputs, offsets: jax.Array, mu1: jax.Array) -> SweepResult:
+    """Evaluate Algorithm 1 at every failure offset.  Shapes: offsets (T,),
+    mu1 () or (M, 1, 1, 1) for a mu-band."""
+    delta = offsets[:, None]                                     # (T, 1)
+    age, work, _, delta_eff = planning.advance_checkpoint_sawtooth(
+        inp.age0, delta, inp.interval, inp.dur)                  # (T, N)
+    rem = jnp.mod(inp.exec_rem0 - work, inp.period)
+    exec_rem = jnp.where(rem == 0.0, inp.period, rem)            # (0, period]
+    t_reexec, _, _, _ = planning.advance_checkpoint_sawtooth(
+        inp.reexec0, offsets, inp.interval, inp.dur)             # (T,)
+    t_recover = inp.t_down + inp.t_restart + t_reexec            # eq. 15
+
+    # rendezvous-completion times in chain (topological) order: direct
+    # blockers wait for the recovering process (eq. 14); chained blockers
+    # wait for their peer to resume and reach the shared progress point.
+    cols, ok = [], []
+    for i, p in enumerate(inp.peer):
+        if p == 0:
+            cols.append(t_recover + exec_rem[:, i])
+            ok.append(jnp.ones_like(exec_rem[:, i], bool))
+        else:
+            cols.append(cols[p - 1] + (exec_rem[:, i] - exec_rem[:, p - 1]))
+            ok.append(exec_rem[:, i] > exec_rem[:, p - 1])
+    t_failed = jnp.stack(cols, axis=-1)                          # (T, N)
+    chain_ok = jnp.stack(ok, axis=-1)
+
+    plan = planning.checkpoint_plan(
+        exec_rem, age, t_failed,
+        interval=inp.interval, dur=inp.dur,
+        beta=inp.ladder.beta, gamma=inp.ladder.gamma,
+        move_ahead=inp.move_ahead, move_frac=inp.move_frac,
+    )
+    decision = strategies.evaluate_strategies(
+        exec_rem, t_failed, plan.n_ckpt, inp.dur, inp.ladder, inp.sleep,
+        inp.wait_mode, inp.p_idle_wait, mu1=mu1, mu2=inp.mu2,
+        per_level_n_ckpt=True,
+    )
+    return SweepResult(
+        decision=decision,
+        exec_rem=exec_rem,
+        ckpt_age=age,
+        delta_eff=delta_eff,
+        t_reexec=t_reexec,
+        t_failed=t_failed,
+        n_ckpt=plan.n_ckpt,
+        plan_move=plan.plan_move,
+        chain_ok=chain_ok,
+    )
+
+
+_sweep_jit = jax.jit(_sweep_core)
+# scenario-stacked variants: per-scenario mu (mapped) vs shared mu-band
+_sweep_scenarios_mu_mapped = jax.jit(jax.vmap(_sweep_core, in_axes=(0, None, 0)))
+_sweep_scenarios_mu_shared = jax.jit(jax.vmap(_sweep_core, in_axes=(0, None, None)))
+
+
+def _mu_band(mu1) -> jax.Array:
+    """() passthrough or (M,) -> (M, 1, 1, 1) so the gate broadcasts against
+    the (T, N, F) wait grid, yielding (M, T, N) decisions."""
+    mu1 = jnp.asarray(mu1, jnp.float32)
+    return mu1 if mu1.ndim == 0 else mu1[:, None, None, None]
+
+
+def sweep_failure_times(
+    cfg: ScenarioConfig,
+    offsets,
+    mu1: Optional[object] = None,
+) -> SweepResult:
+    """Dense failure-time sweep of one scenario — a single jitted call.
+
+    ``offsets`` are wall seconds after the scenario's reference failure
+    instant (shape (T,)).  ``mu1=None`` uses the scenario's own sleep-gate
+    margin; an (M,) array sweeps the mu-band, giving decisions of shape
+    ``(M, T, N)``.
+    """
+    inp = sweep_inputs(cfg)
+    mu1 = inp.mu1 if mu1 is None else _mu_band(mu1)
+    return _sweep_jit(inp, jnp.asarray(offsets, jnp.float32), mu1)
+
+
+def sweep_scenarios(
+    cfgs: Sequence[ScenarioConfig],
+    offsets,
+    mu1: Optional[object] = None,
+) -> SweepResult:
+    """Stacked sweep over scenarios: one jitted dispatch for the whole
+    (scenario x failure_time x node x ladder) grid.
+
+    All scenarios must share survivor count, ladder size, and blocking
+    topology (the Table-4 six do).  Result arrays carry a leading scenario
+    axis.  Per-scenario wait modes, mu margins, ladders, and profiles ride
+    along in the stacked inputs — wait-mode and mu-band axes of the paper
+    grid are covered by stacking scenario variants.
+    """
+    inputs = [sweep_inputs(c) for c in cfgs]
+    peers = {i.peer for i in inputs}
+    if len(peers) != 1:
+        raise ValueError(f"scenarios have mixed blocking topologies: {peers}")
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *inputs)
+    offsets = jnp.asarray(offsets, jnp.float32)
+    if mu1 is None:
+        return _sweep_scenarios_mu_mapped(stacked, offsets, stacked.mu1)
+    return _sweep_scenarios_mu_shared(stacked, offsets, _mu_band(mu1))
+
+
+# ---------------------------------------------------------------------------
+# summary statistics
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SweepSummary:
+    """Distributional view of one scenario's sweep (floats, host-side)."""
+
+    points: int                 # grid points (T * N)
+    mean_saving_j: float        # per-node saving, eq. (1)
+    p5_saving_j: float
+    p95_saving_j: float
+    mean_saving_pct: float
+    sleep_occupancy: float      # fraction of points the sleep gate admitted
+    min_freq_rate: float
+    comp_change_rate: float
+    infeasible_rate: float      # no ladder level feasible -> no intervention
+    mean_wait_s: float
+    chain_violation_rate: float  # chained-rendezvous ordering broken (see chain_ok)
+
+
+def summarize(res: SweepResult) -> SweepSummary:
+    """Reduce a sweep (any batch shape) to summary statistics.
+
+    Points where a chained survivor wrapped past its peer (``chain_ok``
+    False) carry meaningless savings; they are reported in
+    ``chain_violation_rate`` rather than silently averaged over — a nonzero
+    rate means the statistics need a chain-aware reading.
+    """
+    d = res.decision
+    saving = np.asarray(d.saving, np.float64)
+    actions = np.asarray(d.wait_action)
+    return SweepSummary(
+        points=int(saving.size),
+        mean_saving_j=float(saving.mean()),
+        p5_saving_j=float(np.percentile(saving, 5)),
+        p95_saving_j=float(np.percentile(saving, 95)),
+        mean_saving_pct=float(np.asarray(d.saving_pct).mean()),
+        sleep_occupancy=float(np.mean(actions == em.WaitAction.SLEEP)),
+        min_freq_rate=float(np.mean(actions == em.WaitAction.MIN_FREQ)),
+        comp_change_rate=float(np.mean(np.asarray(d.comp_changed))),
+        infeasible_rate=float(np.mean(~np.asarray(d.feasible_any))),
+        mean_wait_s=float(np.asarray(d.wait_time).mean()),
+        chain_violation_rate=float(np.mean(~np.asarray(res.chain_ok))),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Monte-Carlo over exponential failure times
+# ---------------------------------------------------------------------------
+
+def exponential_failure_offsets(
+    key: jax.Array,
+    n_samples: int,
+    mtbf_s: float,
+    wrap_s: float,
+) -> np.ndarray:
+    """Failure offsets for a Poisson failure process with the given MTBF.
+
+    Inter-failure gaps are exponential draws from ``key`` (deterministic);
+    absolute arrival times accumulate in float64 and fold into ``[0,
+    wrap_s)`` — the sweep geometry is evaluated at the folded offset, so the
+    phase of each failure relative to the checkpoint/rendezvous sawtooths is
+    what the exponential process implies, while float32 stays accurate.
+    """
+    gaps = np.asarray(jax.random.exponential(key, (n_samples,)), np.float64)
+    arrivals = np.cumsum(gaps * float(mtbf_s))
+    return np.mod(arrivals, float(wrap_s)).astype(np.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class MonteCarloSummary:
+    """Expected-value view of a scenario under a failure distribution."""
+
+    n_samples: int
+    mtbf_s: float
+    failures_per_year: float
+    # per-failure totals over all survivors (J)
+    mean_saving_j: float
+    p5_saving_j: float
+    p95_saving_j: float
+    mean_saving_pct: float
+    # action occupancy over (sample, node) points
+    sleep_occupancy: float
+    min_freq_rate: float
+    comp_change_rate: float
+    infeasible_rate: float
+    # expected annual savings (J/year), total and per strategy family
+    annual_saving_j: float
+    annual_saving_by_strategy: dict
+
+
+def monte_carlo(
+    cfg: ScenarioConfig,
+    key: jax.Array,
+    n_samples: int = 4096,
+    mtbf_s: float = 30 * 24 * 3600.0,
+    wrap_s: Optional[float] = None,
+    mu1: Optional[object] = None,
+) -> MonteCarloSummary:
+    """Monte-Carlo expectation of the paper's strategies under exponential
+    failure times (one node failing per event, as in the paper).
+
+    Each sampled failure is evaluated with the full analytic engine in the
+    same single jitted dispatch as the dense sweep.  Results are
+    deterministic for a fixed ``key`` (regression-tested).  Annual savings
+    scale the per-failure mean by the expected failure count; the
+    ``by_strategy`` split attributes each point's saving to the selected
+    action family (sleep / min-freq wait / compute-frequency change — points
+    combining a frequency change with a wait action count toward the wait
+    action, matching Table 4's labeling).
+    """
+    if wrap_s is None:
+        wrap_s = 64.0 * (cfg.ckpt_interval + cfg.ckpt_duration)
+    offsets = exponential_failure_offsets(key, n_samples, mtbf_s, wrap_s)
+    res = sweep_failure_times(cfg, offsets, mu1=mu1)
+    if not bool(np.all(np.asarray(res.chain_ok))):
+        # savings at chain-broken instants are meaningless (module docstring);
+        # refuse to average them into expectations — mirror shift_failure.
+        rate = float(np.mean(~np.asarray(res.chain_ok)))
+        raise ValueError(
+            f"{cfg.name}: {rate:.1%} of sampled failure instants break the "
+            "chained-rendezvous ordering; Monte-Carlo expectations are not "
+            "defined for this blocking topology"
+        )
+    d = res.decision
+    saving = np.asarray(d.saving, np.float64)           # (T, N)
+    eni = np.asarray(d.energy_reference, np.float64)
+    actions = np.asarray(d.wait_action)
+    comp_changed = np.asarray(d.comp_changed)
+    per_failure = saving.sum(axis=-1)                   # (T,)
+    failures_per_year = SECONDS_PER_YEAR / float(mtbf_s)
+    mean_saving = float(per_failure.mean())
+
+    masks = {
+        "sleep": actions == em.WaitAction.SLEEP,
+        "min_freq": actions == em.WaitAction.MIN_FREQ,
+        "comp_change_only": (actions == em.WaitAction.NONE) & comp_changed,
+    }
+    by_strategy = {
+        name: float((saving * mask).sum(axis=-1).mean() * failures_per_year)
+        for name, mask in masks.items()
+    }
+    return MonteCarloSummary(
+        n_samples=n_samples,
+        mtbf_s=float(mtbf_s),
+        failures_per_year=failures_per_year,
+        mean_saving_j=mean_saving,
+        p5_saving_j=float(np.percentile(per_failure, 5)),
+        p95_saving_j=float(np.percentile(per_failure, 95)),
+        mean_saving_pct=float(100.0 * per_failure.sum() / max(eni.sum(), 1e-9)),
+        sleep_occupancy=float(np.mean(masks["sleep"])),
+        min_freq_rate=float(np.mean(masks["min_freq"])),
+        comp_change_rate=float(np.mean(comp_changed)),
+        infeasible_rate=float(np.mean(~np.asarray(d.feasible_any))),
+        annual_saving_j=mean_saving * failures_per_year,
+        annual_saving_by_strategy=by_strategy,
+    )

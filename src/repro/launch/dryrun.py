@@ -207,6 +207,9 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    # jax < 0.5 returns one dict per computation; newer versions a flat dict
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else None
     hlo = compiled.as_text()
     from repro.launch.hlo_analysis import analyze_hlo
     hcost = analyze_hlo(hlo)

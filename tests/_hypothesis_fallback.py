@@ -1,0 +1,109 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+The property tests in this repo use a small, self-contained subset of the
+hypothesis API: ``given``, ``settings``, and the ``floats`` / ``integers`` /
+``booleans`` / ``sampled_from`` / ``tuples`` / ``lists`` strategies.  CI
+installs the real library (see pyproject.toml ``[dev]``); in minimal
+environments ``tests/conftest.py`` registers this module under the
+``hypothesis`` name so the suite still collects and the properties still run
+against a fixed, reproducible sample of the input space.
+
+Differences from real hypothesis (acceptable for a fallback):
+  * examples are drawn from a PRNG seeded by the test's qualified name —
+    the same inputs every run, no shrinking, no example database;
+  * ``deadline`` and other settings besides ``max_examples`` are ignored.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import os
+import types
+import zlib
+
+import numpy as np
+
+__all__ = ["given", "settings", "strategies"]
+
+# Cap so a 200-example property stays quick in dependency-free environments;
+# the real hypothesis (installed in CI) runs the full count.
+_MAX_EXAMPLES_CAP = int(os.environ.get("FALLBACK_HYPOTHESIS_MAX_EXAMPLES", "25"))
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng) -> object:
+        return self._draw(rng)
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies`` (``st.`` in the tests)."""
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        def draw(rng):
+            # hit the boundaries occasionally — they are where the invariants
+            # are most likely to break
+            r = rng.uniform()
+            if r < 0.05:
+                return float(min_value)
+            if r < 0.10:
+                return float(max_value)
+            return float(rng.uniform(min_value, max_value))
+        return _Strategy(draw)
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    @staticmethod
+    def sampled_from(options) -> _Strategy:
+        options = list(options)
+        return _Strategy(lambda rng: options[int(rng.integers(0, len(options)))])
+
+    @staticmethod
+    def tuples(*strats: _Strategy) -> _Strategy:
+        return _Strategy(lambda rng: tuple(s.draw(rng) for s in strats))
+
+    @staticmethod
+    def lists(strat: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [strat.draw(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+
+def given(*strats: _Strategy):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(**fixture_kwargs):
+            n = min(getattr(wrapper, "_max_examples", _MAX_EXAMPLES_CAP),
+                    _MAX_EXAMPLES_CAP)
+            seed = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+            rng = np.random.default_rng(seed)
+            for _ in range(n):
+                example = tuple(s.draw(rng) for s in strats)
+                fn(*example, **fixture_kwargs)
+
+        # pytest must not see the strategy-bound parameters (it would try to
+        # resolve them as fixtures); expose only the remaining ones.
+        params = list(inspect.signature(fn).parameters.values())[len(strats):]
+        wrapper.__signature__ = inspect.Signature(params)
+        del wrapper.__wrapped__
+        # pytest's hypothesis integration introspects `obj.hypothesis.inner_test`
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+    return decorate
+
+
+def settings(max_examples: int = _MAX_EXAMPLES_CAP, **_ignored):
+    def decorate(fn):
+        fn._max_examples = max_examples
+        return fn
+    return decorate

@@ -1,0 +1,25 @@
+"""Test-suite bootstrap.
+
+Registers the deterministic ``hypothesis`` fallback (tests/_hypothesis_fallback.py)
+when the real library is absent, so the property-based modules collect and run
+in dependency-free environments.  CI installs real hypothesis from
+``pyproject.toml [dev]`` and this shim stays dormant there.
+"""
+import pathlib
+import sys
+import types
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+    import _hypothesis_fallback as _fb
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = _fb.given
+    hyp.settings = _fb.settings
+    hyp.strategies = types.ModuleType("hypothesis.strategies")
+    for name in ("floats", "integers", "booleans", "sampled_from", "tuples", "lists"):
+        setattr(hyp.strategies, name, getattr(_fb.strategies, name))
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = hyp.strategies

@@ -1,0 +1,255 @@
+"""Batched failure-sweep engine tests.
+
+The load-bearing check is the cross-validation harness: the analytic sweep
+(`core/sweep.py`, one jitted JAX program) must agree *pointwise* with the
+event-driven simulator (`core/simulator.py`) on every Table-4 scenario across
+a dense failure-time grid.  The two paths share the closed-form checkpoint
+plan (planning.py) but integrate energy completely differently — analytic
+eq. (1)-(13) terms vs piecewise-constant power over an event timeline — so
+agreement validates the energy accounting, phase geometry, and decision
+coherence all at once.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import energy_model as em
+from repro.core import planning, sweep
+from repro.core.scenarios import failure_state_at, paper_scenarios, shift_failure
+from repro.core.simulator import NodeStart, ScenarioConfig, simulate
+
+# generic offsets: irrational-ish jitter keeps the grid off the measure-zero
+# checkpoint/rendezvous boundaries where float32 and float64 may round a
+# timer count differently
+N_OFFSETS = 64
+OFFSETS = np.linspace(0.0, 7200.0, N_OFFSETS, endpoint=False) + 0.318
+
+
+# ---------------------------------------------------------------------------
+# phase geometry
+# ---------------------------------------------------------------------------
+
+def test_sawtooth_no_fire():
+    age, work, n, eff = planning.advance_checkpoint_sawtooth(60.0, 100.0, 1800.0, 120.0)
+    assert (age, work, n, eff) == (160.0, 100.0, 0.0, 100.0)
+
+
+def test_sawtooth_one_fire():
+    # first fire at 1740 wall, ends 1860; delta 2000 -> age 140, 120 s lost
+    age, work, n, eff = planning.advance_checkpoint_sawtooth(60.0, 2000.0, 1800.0, 120.0)
+    assert (age, work, n, eff) == (140.0, 1880.0, 1.0, 2000.0)
+
+
+def test_sawtooth_snaps_mid_checkpoint():
+    # delta 1800 lands inside the [1740, 1860] checkpoint -> snap to its end
+    age, work, n, eff = planning.advance_checkpoint_sawtooth(60.0, 1800.0, 1800.0, 120.0)
+    assert (age, n, eff) == (0.0, 1.0, 1860.0)
+    assert work == 1740.0  # exec time only
+
+
+def test_sawtooth_many_periods():
+    # k-th fire starts at 1740 + k*1920; after 5 full periods + 100 s
+    delta = 1740.0 + 5 * 1920.0 + 120.0 + 100.0
+    age, work, n, eff = planning.advance_checkpoint_sawtooth(60.0, delta, 1800.0, 120.0)
+    assert n == 6.0 and age == 100.0 and eff == delta
+    assert work == delta - 6 * 120.0
+
+
+def test_failure_state_wraps_rendezvous():
+    cfg = ScenarioConfig(
+        name="wrap",
+        survivors=(NodeStart(exec_to_rendezvous=300.0, rendezvous_period=600.0,
+                             ckpt_age=0.0),),
+        t_down=60.0, t_restart=60.0, t_reexec=100.0, ckpt_interval=1e9,
+    )
+    st = failure_state_at(cfg, 500.0)  # 500 s of work: 300 -> wraps -> 400 left
+    np.testing.assert_allclose(st.exec_rem, [400.0])
+    np.testing.assert_allclose(st.ckpt_age, [500.0])
+
+
+def test_failure_state_reexec_follows_failed_nodes_sawtooth():
+    cfg = ScenarioConfig(
+        name="reexec",
+        survivors=(NodeStart(exec_to_rendezvous=300.0),),
+        t_down=60.0, t_restart=60.0, t_reexec=110.0,
+        ckpt_interval=1800.0, ckpt_duration=120.0,
+    )
+    # failed node's next checkpoint at wall 1690; at delta 2000 its lost work
+    # restarted from that checkpoint's end (1810): 190 s
+    st = failure_state_at(cfg, 2000.0)
+    np.testing.assert_allclose(st.t_reexec, 190.0)
+    np.testing.assert_allclose(st.t_recover, 60.0 + 60.0 + 190.0)
+
+
+def test_shift_by_zero_is_identity():
+    for cfg in paper_scenarios().values():
+        shifted = shift_failure(cfg, 0.0)
+        for a, b in zip(shifted.survivors, cfg.survivors):
+            assert a.exec_to_rendezvous == b.exec_to_rendezvous
+            assert a.ckpt_age == b.ckpt_age
+        assert shifted.t_reexec == cfg.t_reexec
+
+
+# ---------------------------------------------------------------------------
+# cross-validation: analytic sweep == event simulator, pointwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(paper_scenarios()))
+def test_sweep_matches_event_simulator_pointwise(name):
+    """Acceptance bar: per-point savings within 1% of the event simulator on
+    every Table-4 scenario across >= 64 failure times."""
+    cfg = paper_scenarios()[name]
+    res = sweep.sweep_failure_times(cfg, OFFSETS)
+    pred = np.asarray(res.decision.saving, np.float64)            # (T, N)
+    eni = np.asarray(res.decision.energy_reference, np.float64)
+    levels = np.asarray(res.decision.level)
+    actions = np.asarray(res.decision.wait_action)
+
+    for t, delta in enumerate(OFFSETS):
+        ref = simulate(shift_failure(cfg, float(delta)), intervene=False)
+        act = simulate(shift_failure(cfg, float(delta)), intervene=True)
+        for i, node in enumerate(sorted(act.outcomes)):
+            o = act.outcomes[node]
+            measured = ref.outcomes[node].energy - o.energy
+            # decisions must match exactly
+            assert levels[t, i] == o.level, (name, delta, node)
+            assert actions[t, i] == int(o.wait_action), (name, delta, node)
+            # savings within 1% relative tolerance (floor the denominator at
+            # 1% of the reference energy so near-zero savings compare on the
+            # scale that matters)
+            denom = max(abs(measured), 0.01 * eni[t, i], 1.0)
+            assert abs(pred[t, i] - measured) / denom < 0.01, (
+                name, delta, node, pred[t, i], measured)
+
+
+def test_sweep_reference_instant_reproduces_table4_decisions():
+    """Offset 0 of the sweep is exactly the paper's simulated instant."""
+    expected_actions = {
+        "scenario1_short_reexec": [em.WaitAction.MIN_FREQ, em.WaitAction.SLEEP,
+                                   em.WaitAction.SLEEP],
+        "scenario2_long_reexec": [em.WaitAction.SLEEP] * 3,
+        "scenario4_short_active_waits": [em.WaitAction.MIN_FREQ] * 3,
+        "scenario5_short_idle_waits": [em.WaitAction.NONE] * 3,
+    }
+    for name, acts in expected_actions.items():
+        res = sweep.sweep_failure_times(paper_scenarios()[name], np.array([0.0]))
+        assert list(np.asarray(res.decision.wait_action)[0]) == [int(a) for a in acts], name
+
+
+# ---------------------------------------------------------------------------
+# batching: scenario stacking and mu-band
+# ---------------------------------------------------------------------------
+
+def test_stacked_scenarios_match_individual_sweeps():
+    cfgs = list(paper_scenarios().values())
+    stacked = sweep.sweep_scenarios(cfgs, OFFSETS)
+    assert stacked.decision.saving.shape == (len(cfgs), N_OFFSETS, 3)
+    for s, cfg in enumerate(cfgs):
+        single = sweep.sweep_failure_times(cfg, OFFSETS)
+        np.testing.assert_array_equal(
+            np.asarray(stacked.decision.level)[s], np.asarray(single.decision.level))
+        np.testing.assert_allclose(
+            np.asarray(stacked.decision.saving)[s],
+            np.asarray(single.decision.saving), rtol=1e-6)
+
+
+def test_mu_band_monotone_sleep_occupancy():
+    """Tightening the sleep gate (larger mu1) can only reduce how often the
+    gate admits sleeping."""
+    cfg = paper_scenarios()["scenario1_short_reexec"]
+    mu = np.array([2.0, 4.0, 6.0, 8.0, 12.0], np.float32)
+    res = sweep.sweep_failure_times(cfg, OFFSETS, mu1=mu)
+    assert res.decision.saving.shape == (5, N_OFFSETS, 3)
+    occ = [float(np.mean(np.asarray(res.decision.wait_action)[m] == em.WaitAction.SLEEP))
+           for m in range(len(mu))]
+    assert all(a >= b for a, b in zip(occ, occ[1:])), occ
+    # the scenario's own mu1 (6.0) row equals the unbanded sweep
+    base = sweep.sweep_failure_times(cfg, OFFSETS)
+    np.testing.assert_allclose(
+        np.asarray(res.decision.saving)[2], np.asarray(base.decision.saving), rtol=1e-6)
+
+
+def test_wait_mode_axis_via_scenario_variants():
+    """The wait-mode axis of the grid: idle-wait variants decide differently
+    (scenario 4 vs 5 is the paper's own A/B)."""
+    cfgs = paper_scenarios()
+    both = sweep.sweep_scenarios(
+        [cfgs["scenario4_short_active_waits"], cfgs["scenario5_short_idle_waits"]],
+        OFFSETS)
+    active, idle = np.asarray(both.decision.wait_action)
+    assert np.any(active == em.WaitAction.MIN_FREQ)
+    assert not np.any(idle == em.WaitAction.MIN_FREQ)  # nothing to throttle when blocked
+
+
+# ---------------------------------------------------------------------------
+# Monte-Carlo
+# ---------------------------------------------------------------------------
+
+def test_monte_carlo_deterministic_under_fixed_key():
+    cfg = paper_scenarios()["scenario2_long_reexec"]
+    a = sweep.monte_carlo(cfg, jax.random.PRNGKey(7), n_samples=512)
+    b = sweep.monte_carlo(cfg, jax.random.PRNGKey(7), n_samples=512)
+    assert a == b
+    c = sweep.monte_carlo(cfg, jax.random.PRNGKey(8), n_samples=512)
+    assert c.mean_saving_j != a.mean_saving_j  # different key, different draw
+
+
+def test_monte_carlo_statistics_sane():
+    cfg = paper_scenarios()["scenario2_long_reexec"]
+    mc = sweep.monte_carlo(cfg, jax.random.PRNGKey(0), n_samples=2048,
+                           mtbf_s=30 * 24 * 3600.0)
+    assert mc.p5_saving_j <= mc.mean_saving_j <= mc.p95_saving_j
+    assert mc.mean_saving_j > 0
+    assert 0.0 <= mc.sleep_occupancy <= 1.0
+    assert 0.0 <= mc.infeasible_rate <= 1.0
+    np.testing.assert_allclose(mc.failures_per_year, 365.25 / 30.0)
+    np.testing.assert_allclose(
+        mc.annual_saving_j, mc.mean_saving_j * mc.failures_per_year, rtol=1e-9)
+    # strategy attribution partitions the total (every point's saving is
+    # attributed to exactly one family, or to none when infeasible)
+    assert sum(mc.annual_saving_by_strategy.values()) <= mc.annual_saving_j * (1 + 1e-9)
+
+
+def test_overdue_checkpoint_age_rejected():
+    """The sawtooth closed form assumes no node starts past its timer; both
+    the shifting helper and the sweep inputs must refuse such configs."""
+    cfg = ScenarioConfig(
+        name="overdue",
+        survivors=(NodeStart(exec_to_rendezvous=300.0, ckpt_age=2000.0),),
+        t_down=60.0, t_restart=60.0, t_reexec=110.0, ckpt_interval=1800.0,
+    )
+    with pytest.raises(ValueError, match="ckpt_interval"):
+        failure_state_at(cfg, 0.0)
+    with pytest.raises(ValueError, match="ckpt_interval"):
+        sweep.sweep_failure_times(cfg, np.array([0.0]))
+
+
+def test_monte_carlo_rejects_chain_breaking_topology():
+    """Chained survivors routinely invert ordering under random offsets;
+    expectations over meaningless savings must raise, mirroring
+    shift_failure."""
+    cfg = ScenarioConfig(
+        name="chain",
+        survivors=(NodeStart(exec_to_rendezvous=300.0, ckpt_age=10.0),
+                   NodeStart(exec_to_rendezvous=420.0, ckpt_age=10.0, peer=1)),
+        t_down=60.0, t_restart=60.0, t_reexec=1800.0,
+    )
+    with pytest.raises(ValueError, match="chained-rendezvous"):
+        sweep.monte_carlo(cfg, jax.random.PRNGKey(0), n_samples=256)
+    # the dense sweep reports rather than raises: violations are flagged
+    res = sweep.sweep_failure_times(cfg, OFFSETS)
+    summ = sweep.summarize(res)
+    assert summ.chain_violation_rate > 0.0
+    np.testing.assert_allclose(
+        summ.chain_violation_rate, np.mean(~np.asarray(res.chain_ok)))
+
+
+def test_summarize_shapes_and_ranges():
+    cfg = paper_scenarios()["scenario1_short_reexec"]
+    s = sweep.summarize(sweep.sweep_failure_times(cfg, OFFSETS))
+    assert s.points == N_OFFSETS * 3
+    assert s.p5_saving_j <= s.mean_saving_j <= s.p95_saving_j
+    assert 0.0 <= s.sleep_occupancy <= 1.0
+    assert s.sleep_occupancy + s.min_freq_rate <= 1.0 + 1e-9
