@@ -7,10 +7,18 @@ dispatch of the sweep engine (``repro.core.sweep``) — and reports per-scenario
 distributional statistics plus Monte-Carlo expected annual savings under an
 exponential MTBF.
 
-Run:  PYTHONPATH=src python -m benchmarks.failure_sweep
+Renewal mode (multi-failure whole runs) is benchmarked alongside: per-run
+failure *sequences* composed through ``sweep.renewal_compose`` (host
+float64 geometry recursion + one jitted Algorithm-1 dispatch over every
+(run, epoch, survivor) point), reported as end-to-end decisions/s next to
+the single-failure grid's, plus per-scenario whole-run expectations.
+
+Run:  PYTHONPATH=src python -m benchmarks.failure_sweep [--json BENCH_failure_sweep.json]
 """
 from __future__ import annotations
 
+import json
+import sys
 import time
 
 import jax
@@ -23,6 +31,12 @@ N_OFFSETS = 4096
 HORIZON_S = 7200.0          # two checkpoint intervals of failure-time diversity
 JITTER_S = 0.318            # keeps the grid off exact checkpoint boundaries
 MTBF_DAYS = 30.0
+
+# renewal mode: whole-run composition over repeated failures
+RENEWAL_RUNS = 256
+RENEWAL_MAX_FAILURES = 32
+RENEWAL_MAKESPAN_D = 30.0
+RENEWAL_MTBF_D = 7.0        # per-node MTBF
 
 
 def grid_offsets(n_offsets: int = N_OFFSETS) -> np.ndarray:
@@ -43,6 +57,47 @@ def scenario_stats(n_offsets: int = N_OFFSETS, mtbf_days: float = MTBF_DAYS) -> 
                                mtbf_s=mtbf_days * 24 * 3600.0)
         out[name] = (summ, mc)
     return out
+
+
+def renewal_stats(
+    n_runs: int = RENEWAL_RUNS,
+    max_failures: int = RENEWAL_MAX_FAILURES,
+    makespan_d: float = RENEWAL_MAKESPAN_D,
+    mtbf_d: float = RENEWAL_MTBF_D,
+) -> dict:
+    """name -> RenewalMonteCarloSummary for the six Table-4 scenarios."""
+    return {
+        name: sweep.renewal_monte_carlo(
+            cfg, jax.random.PRNGKey(0), n_runs=n_runs,
+            makespan_s=makespan_d * 24 * 3600.0,
+            mtbf_s=mtbf_d * 24 * 3600.0, max_failures=max_failures)
+        for name, cfg in paper_scenarios().items()
+    }
+
+
+def renewal_throughput(
+    n_runs: int = RENEWAL_RUNS, max_failures: int = RENEWAL_MAX_FAILURES
+) -> dict:
+    """End-to-end renewal composition throughput (decisions/s): host
+    geometry recursion + the jitted Algorithm-1 dispatch, warm."""
+    cfg = paper_scenarios()["scenario2_long_reexec"]
+    gaps, failed = sweep.renewal_failure_gaps(
+        jax.random.PRNGKey(1), n_runs, len(cfg.survivors) + 1, max_failures,
+        RENEWAL_MTBF_D * 24 * 3600.0)
+    makespan = RENEWAL_MAKESPAN_D * 24 * 3600.0
+    res = sweep.renewal_compose(cfg, gaps, makespan, failed_node=failed)
+    jax.block_until_ready(res.decision.saving)
+    t0 = time.perf_counter()
+    res = sweep.renewal_compose(cfg, gaps, makespan, failed_node=failed)
+    jax.block_until_ready(res.decision.saving)
+    dt = time.perf_counter() - t0
+    n_decisions = int(np.prod(res.decision.saving.shape))
+    return {
+        "seconds": dt,
+        "decisions": n_decisions,
+        "decisions_per_s": n_decisions / dt,
+        "mean_failures": float(res.n_failures.mean()),
+    }
 
 
 def run() -> list:
@@ -90,12 +145,48 @@ def run() -> list:
                 f"_sleep={mc.sleep_occupancy:.2f}"
             ),
         })
+
+    # renewal mode: whole-run multi-failure composition
+    thr = renewal_throughput()
+    rows.append({
+        "name": f"failure_sweep/renewal_{RENEWAL_RUNS}x{RENEWAL_MAX_FAILURES}x3",
+        "us_per_call": thr["seconds"] * 1e6,
+        "decisions_per_s": thr["decisions_per_s"],
+        "derived": (
+            f"{thr['decisions_per_s']:.3e}dec/s"
+            f"_meanfail={thr['mean_failures']:.1f}"
+        ),
+    })
+    for name, mc in renewal_stats().items():
+        rows.append({
+            "name": f"failure_sweep/renewal_{name}",
+            "us_per_call": 0.0,
+            "decisions_per_s": 0.0,
+            "derived": (
+                f"run_save={mc.mean_saving_j / 3.6e6:.2f}kWh"
+                f"_pct={mc.mean_saving_pct:.2f}"
+                f"_failures={mc.mean_failures:.1f}"
+                f"_trunc={mc.truncated_rate:.2f}"
+            ),
+        })
     return rows
 
 
-def main():
-    for r in run():
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    json_path = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        if i + 1 >= len(argv):
+            sys.exit("usage: python -m benchmarks.failure_sweep [--json PATH]")
+        json_path = argv[i + 1]
+    rows = run()
+    for r in rows:
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    if json_path is not None:
+        with open(json_path, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"# wrote {json_path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -95,6 +95,32 @@ def failure_sweep_table(n_offsets: int = 4096, mtbf_days: float = 30.0) -> str:
     return "\n".join(out)
 
 
+def renewal_table(n_runs: int = 128, makespan_d: float = 30.0,
+                  mtbf_d: float = 7.0) -> str:
+    """Whole-run multi-failure expectations per scenario — the renewal view
+    (repeated failures over an application makespan) that neither Table 4
+    nor the single-failure sweep can give."""
+    from benchmarks.failure_sweep import renewal_stats
+
+    out = [
+        f"### Renewal runs — {n_runs} runs, {makespan_d:g} d makespan, "
+        f"{mtbf_d:g} d per-node MTBF",
+        "",
+        "| scenario | E[failures] | E[run saving] | p5..p95 | run save % | "
+        "sleep occ. | E[annual] |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for name, mc in renewal_stats(n_runs=n_runs, makespan_d=makespan_d,
+                                  mtbf_d=mtbf_d).items():
+        out.append(
+            f"| {name} | {mc.mean_failures:.1f} | "
+            f"{mc.mean_saving_j / 3.6e6:.2f} kWh | "
+            f"{mc.p5_saving_j / 3.6e6:.2f}..{mc.p95_saving_j / 3.6e6:.2f} kWh | "
+            f"{mc.mean_saving_pct:.2f} | {mc.sleep_occupancy:.2f} | "
+            f"{mc.annual_saving_j / 3.6e6:.1f} kWh |")
+    return "\n".join(out)
+
+
 def main():
     print("## Dry-run records\n")
     for mesh in ("single", "multi"):
@@ -108,6 +134,9 @@ def main():
         print()
     print("## Failure sweep\n")
     print(failure_sweep_table())
+    print()
+    print("## Renewal runs (multi-failure)\n")
+    print(renewal_table())
     print()
 
 

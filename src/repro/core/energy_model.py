@@ -47,6 +47,7 @@ __all__ = [
     "SleepArrays",
     "comp_time",
     "comp_energy",
+    "take_level",
     "wait_time",
     "awake_wait_energy",
     "sleep_wait_energy",
@@ -145,6 +146,22 @@ def _ladderize(n_ckpt, per_level: bool):
     return n_ckpt if per_level else n_ckpt[..., None]
 
 
+def take_level(a, level):
+    """Gather the trailing ladder axis of ``a`` at per-node ``level``.
+
+    ``a`` is (..., F); ``level`` broadcasts against the node batch shape.
+    Used wherever a per-node *current* ladder level (renewal runs: survivors
+    may still hold a non-fa level from a prior failure epoch) selects one
+    column of a per-level array.
+    """
+    a = jnp.asarray(a)
+    level = jnp.asarray(level, jnp.int32)
+    shape = jnp.broadcast_shapes(a.shape[:-1], level.shape)
+    a = jnp.broadcast_to(a, shape + a.shape[-1:])
+    idx = jnp.broadcast_to(level, shape)[..., None]
+    return jnp.take_along_axis(a, idx, axis=-1)[..., 0]
+
+
 def comp_time(t_comp_fa, n_ckpt, t_ckpt, ladder: LadderArrays, *, per_level_n_ckpt=False):
     """Duration of the computation phase at every ladder level.
 
@@ -207,12 +224,24 @@ def sleep_allowed(wait_t, e_sleep, e_awake, sleep: SleepArrays, mu1, mu2):
 # ---------------------------------------------------------------------------
 
 def reference_energy(t_comp_fa, t_failed, n_ckpt, t_ckpt, ladder: LadderArrays,
-                     wait_mode, p_idle_wait, *, per_level_n_ckpt=False):
-    """eq (2): ENI — case B, everything at fa, no sleep, no wait action."""
-    ct = comp_time(t_comp_fa, n_ckpt, t_ckpt, ladder, per_level_n_ckpt=per_level_n_ckpt)[..., 0]
-    ce = comp_energy(t_comp_fa, n_ckpt, t_ckpt, ladder, per_level_n_ckpt=per_level_n_ckpt)[..., 0]
+                     wait_mode, p_idle_wait, *, per_level_n_ckpt=False, ref_level=0):
+    """eq (2): ENI — case B, continue as currently configured, no wait action.
+
+    The paper's reference is "everything at fa" because its single failure
+    always lands on a balanced application.  ``ref_level`` generalizes that
+    to the node's *current* ladder level (renewal runs re-evaluate Algorithm 1
+    at each failure, and a survivor may still hold a slowed level from a
+    prior epoch): compute, checkpoints, and the active wait all run at
+    ``ref_level``.  Scalar 0 (the default) is the paper's baseline.
+    """
+    ct = take_level(
+        comp_time(t_comp_fa, n_ckpt, t_ckpt, ladder, per_level_n_ckpt=per_level_n_ckpt),
+        ref_level)
+    ce = take_level(
+        comp_energy(t_comp_fa, n_ckpt, t_ckpt, ladder, per_level_n_ckpt=per_level_n_ckpt),
+        ref_level)
     wt = jnp.asarray(t_failed) - ct
-    we = awake_wait_energy(wt, wait_mode, ladder, p_idle_wait, spin_level=0)
+    we = awake_wait_energy(wt, wait_mode, ladder, p_idle_wait, spin_level=ref_level)
     return ce + we
 
 

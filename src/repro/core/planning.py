@@ -33,6 +33,7 @@ __all__ = [
     "ExpectedSavings",
     "CheckpointPlan",
     "advance_checkpoint_sawtooth",
+    "balanced_span",
     "checkpoint_plan",
     "expected_savings",
     "optimal_checkpoint_interval",
@@ -84,6 +85,31 @@ def advance_checkpoint_sawtooth(age0, delta, interval, dur):
     delta_eff = xp.where(mid, first + j * period + dur, delta)
     work = delta_eff - n_fired * dur
     return age, work, n_fired, delta_eff
+
+
+def balanced_span(age0, span, interval, dur):
+    """Split a balanced-execution span into (work, checkpoint) wall time.
+
+    A node executing at fa with timer checkpoints (age ``age0`` at the span
+    start) spends ``span`` wall seconds either working or checkpointing —
+    there are no waits in balanced execution, so the two partition the span
+    exactly.  Unlike ``advance_checkpoint_sawtooth`` this does *not* snap
+    mid-checkpoint endpoints forward: a span ending inside a checkpoint
+    counts the partial checkpoint time, so the returned pair always sums to
+    ``span``.  The renewal engines integrate inter-failure and end-of-run
+    spans with it:  ``energy = work * p_comp[0] + ckpt * p_ckpt[0]``.
+
+    Returns ``(work, ckpt_time)``; broadcasts over any batch shape.
+    """
+    xp = _ns(age0, span, interval, dur)
+    age0, span = xp.asarray(age0), xp.asarray(span)
+    first = interval - age0                  # wall time of the first timer fire
+    period = interval + dur
+    q = xp.maximum(span - first, 0.0)
+    j = xp.floor(q / period)                 # completed fires before the span end
+    r = q - j * period                       # time since the last fire began
+    ckpt = xp.where(span > first, j * dur + xp.minimum(r, dur), 0.0)
+    return span - ckpt, ckpt
 
 
 @dataclasses.dataclass(frozen=True)

@@ -40,6 +40,7 @@ __all__ = [
     "FailureState",
     "failure_state_at",
     "shift_failure",
+    "post_recovery_config",
 ]
 
 
@@ -135,6 +136,7 @@ class FailureState:
     delta_eff: np.ndarray      # per-node snapped instant (see advance_checkpoint_sawtooth)
     t_reexec: float            # failed node's lost work = re-execution time at fa
     t_recover: float           # T_down + T_restart + t_reexec  (eq. 15)
+    delta_eff_failed: float    # the failed node's own snapped instant
 
 
 def failure_state_at(cfg: ScenarioConfig, delta: float) -> FailureState:
@@ -169,7 +171,7 @@ def failure_state_at(cfg: ScenarioConfig, delta: float) -> FailureState:
     rem = np.mod(exec0 - work, period)
     exec_rem = np.where(rem == 0.0, period, rem)
     # failed node: age == lost work at fa between checkpoints
-    reexec, _, _, _ = planning.advance_checkpoint_sawtooth(
+    reexec, _, _, delta_eff_failed = planning.advance_checkpoint_sawtooth(
         np.float64(cfg.t_reexec), np.float64(delta),
         cfg.ckpt_interval, cfg.ckpt_duration,
     )
@@ -181,6 +183,7 @@ def failure_state_at(cfg: ScenarioConfig, delta: float) -> FailureState:
         delta_eff=np.asarray(delta_eff, np.float64),
         t_reexec=t_reexec,
         t_recover=cfg.t_down + cfg.t_restart + t_reexec,
+        delta_eff_failed=float(delta_eff_failed),
     )
 
 
@@ -211,4 +214,59 @@ def shift_failure(cfg: ScenarioConfig, delta: float) -> ScenarioConfig:
         name=f"{cfg.name}@+{delta:g}s",
         survivors=survivors,
         t_reexec=st.t_reexec,
+    )
+
+
+def post_recovery_config(cfg: ScenarioConfig) -> ScenarioConfig:
+    """Re-anchor a scenario at the renewal point after its failure is handled.
+
+    ``cfg`` is the system state at a failure instant (the original snapshot
+    or a ``shift_failure`` output).  The epoch it starts plays out as in the
+    paper — down / restart / re-execute on the failed node, per-survivor
+    intervention windows — and closes at the renewal point ``T_E = T_recover
+    + max_i exec_rem_i``, when the last rendezvous completes.  Two FT-runtime
+    policies (documented in docs/sweep.md) make the post-epoch state exact
+    and balanced:
+
+      * post-rendezvous, survivors revert to fa and timer checkpoints are
+        suppressed for the epoch's short trailing span, so at ``T_E`` every
+        node — including the recovered one — sits at the same progress point
+        ``P* = max_i exec_rem_i`` (the rendezvous identity: survivor ``i``
+        completes at ``T_recover + exec_rem_i`` and then executes at fa for
+        ``T_E - t_failed_i = P* - exec_rem_i`` seconds);
+      * at ``T_E`` the runtime takes a *coordinated re-synchronization
+        checkpoint* (standard practice after a recovery: a second failure
+        must not replay the first), so every checkpoint age — and the failed
+        node's lost-work sawtooth — restarts from zero.
+
+    The returned config is the balanced snapshot right after that
+    checkpoint: ages 0, lost work 0, and each survivor's next rendezvous at
+    the first multiple of its period past ``P*`` (in ``(0, period]``).
+    Chained blocking topologies are rejected — the renewal identity above
+    assumes direct blockers (``peer == 0``), which all Table-4 scenarios are.
+    """
+    if any(sv.peer != 0 for sv in cfg.survivors):
+        raise ValueError(
+            f"{cfg.name}: renewal re-anchoring requires direct blockers "
+            "(peer == 0); chained topologies do not resynchronize at T_E"
+        )
+    exec_rem = np.array([s.exec_to_rendezvous for s in cfg.survivors], np.float64)
+    period = np.array([s.rendezvous_period for s in cfg.survivors], np.float64)
+    p_star = float(np.max(exec_rem))
+    gap = np.mod(p_star - exec_rem, period)
+    exec_next = np.where(gap == 0.0, period, period - gap)
+    survivors = tuple(
+        dataclasses.replace(
+            sv,
+            exec_to_rendezvous=float(exec_next[i]),
+            ckpt_age=0.0,
+            level=0,
+        )
+        for i, sv in enumerate(cfg.survivors)
+    )
+    return dataclasses.replace(
+        cfg,
+        name=f"{cfg.name}|renewed",
+        survivors=survivors,
+        t_reexec=0.0,
     )

@@ -54,7 +54,10 @@ __all__ = [
     "NodeOutcome",
     "SimResult",
     "ComparisonRow",
+    "EpochRecord",
+    "RunResult",
     "simulate",
+    "simulate_run",
     "compare",
 ]
 
@@ -82,12 +85,21 @@ class NodeStart:
     chain.  The shared progress point must lie after the peer's own block
     (exec_to_rendezvous > peer's exec_to_rendezvous) and peers must precede
     their children in the survivors tuple.
+
+    ``level`` is the node's *current* DVFS ladder level at the failure
+    instant.  The paper's single failure always lands on a balanced
+    application (everyone at fa, level 0); a failure landing while a node is
+    still slowed from an earlier intervention starts from a non-fa level, and
+    both the reference run (case B: continue as currently configured) and
+    Algorithm 1's ENI baseline use it (``strategies.evaluate_strategies``'s
+    ``ref_level``).
     """
 
     exec_to_rendezvous: float      # fa-seconds of work until the next rendezvous
     rendezvous_period: float = 3600.0
     ckpt_age: float = 60.0         # wall seconds since last checkpoint end
     peer: int = 0                  # 0 = the failed process; i>0 = survivor i
+    level: int = 0                 # current DVFS ladder level (0 = fa)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -256,6 +268,10 @@ def simulate(cfg: ScenarioConfig, intervene: bool) -> SimResult:
     plan_move = plan.plan_move
     n_ckpt = plan.n_ckpt
 
+    start_levels = np.array([s.level for s in cfg.survivors], dtype=np.int64)
+    if np.any(start_levels < 0) or np.any(start_levels >= len(pt.freq_ghz)):
+        raise ValueError(f"{cfg.name}: survivor start levels {start_levels} "
+                         f"outside ladder [0, {len(pt.freq_ghz)})")
     if intervene:
         decision = strategies.evaluate_strategies_profile(
             profile,
@@ -267,12 +283,15 @@ def simulate(cfg: ScenarioConfig, intervene: bool) -> SimResult:
             mu1=cfg.mu1,
             mu2=cfg.mu2,
             per_level_n_ckpt=True,
+            ref_level=start_levels,
         )
         levels = np.asarray(decision.level)
         wait_actions = [em.WaitAction(int(a)) for a in np.asarray(decision.wait_action)]
         predicted_saving = np.asarray(decision.saving)
     else:
-        levels = np.zeros(n_survivors, dtype=np.int64)
+        # case B: continue as currently configured (the paper's "no action"
+        # baseline is fa only because its failure lands on a balanced app)
+        levels = start_levels
         wait_actions = [em.WaitAction.NONE] * n_survivors
         predicted_saving = np.zeros(n_survivors)
     node_plan_move = {i + 1: bool(plan_move[i]) for i in range(n_survivors)}
@@ -341,9 +360,11 @@ def simulate(cfg: ScenarioConfig, intervene: bool) -> SimResult:
         elif action == em.WaitAction.MIN_FREQ:
             emit(node, t, t_arr, Phase.WAIT_ACTIVE, p.level, wait_level=min_level)
         else:
-            # reference / idle: active waits spin at fa, idle waits block.
+            # reference / idle: active waits keep spinning at the node's
+            # current level (fa in the paper's balanced case), idle waits
+            # block.
             if cfg.wait_mode == em.WaitMode.ACTIVE:
-                emit(node, t, t_arr, Phase.WAIT_ACTIVE, p.level, wait_level=0)
+                emit(node, t, t_arr, Phase.WAIT_ACTIVE, p.level, wait_level=p.level)
             else:
                 emit(node, t, t_arr, Phase.WAIT_IDLE, p.level)
         push(t_arr, "rendezvous_complete", node, procs[node].seq)
@@ -424,6 +445,171 @@ def _schedule_next(p: _Proc, cfg: ScenarioConfig, push: Callable, now: Optional[
         push(t_ckpt, "ckpt_timer", p.node, p.seq)
     else:
         push(t_reach, "reach_rendezvous", p.node, p.seq)
+
+
+# ---------------------------------------------------------------------------
+# renewal runs: repeated failures over an application makespan
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class EpochRecord:
+    """One handled failure inside a renewal run.
+
+    Per-survivor energies integrate each node over the whole epoch
+    ``[failure, T_E]`` — the intervention window plus the post-rendezvous
+    trailing span at fa — so reference and intervened timelines cover the
+    same wall interval and their difference is exactly the eq. (1) saving.
+    """
+
+    index: int
+    t_fail: float              # absolute wall time of the (snapped) failure
+    delta: float               # balanced-execution gap from the previous anchor
+    config: ScenarioConfig     # system state at the failure instant
+    t_renewal: float           # epoch duration T_E (failure -> last rendezvous)
+    energy_ref: np.ndarray     # (N,) per-survivor epoch energy, reference run
+    energy_int: np.ndarray     # (N,) per-survivor epoch energy, intervened run
+    energy_failed: float       # failed node energy over [0, T_E] (both runs)
+    saving: np.ndarray         # (N,) energy_ref - energy_int
+    levels: np.ndarray         # (N,) selected ladder levels
+    wait_actions: list         # (N,) em.WaitAction
+
+
+@dataclasses.dataclass
+class RunResult:
+    """Whole-run energy accounting for a multi-failure renewal run."""
+
+    config: ScenarioConfig
+    makespan_s: float
+    epochs: list               # EpochRecord per handled failure
+    n_failures: int
+    end_time: float            # wall end of the run (>= makespan_s)
+    balanced_energy: float     # inter-failure spans + resync ckpts + tail (J)
+    energy_ref: float          # whole run, no intervention (J)
+    energy_int: float          # whole run, Algorithm 1 at every failure (J)
+    saving: float              # energy_ref - energy_int (J)
+
+
+def _epoch_node_energy(segments, node: int, t_e: float, p_comp0: float):
+    """All of a node's segment energy plus the trailing fa span to ``T_E``."""
+    segs = [s for s in segments if s.node == node]
+    energy = sum(s.energy for s in segs)
+    end = max(s.t1 for s in segs)
+    return energy + max(t_e - end, 0.0) * p_comp0
+
+
+def simulate_run(cfg: ScenarioConfig, gaps, makespan_s: float) -> RunResult:
+    """Event-driven multi-failure renewal run (reference + intervened).
+
+    ``gaps`` are balanced-execution wall seconds between each renewal anchor
+    and the next failure; ``makespan_s`` is the application's failure-free
+    length, so failure ``k`` is dropped (with everything after it) once the
+    *balanced* time consumed so far plus ``gaps[k]`` exceeds ``makespan_s``
+    — recovery epochs extend the run's wall end beyond the makespan instead
+    of eating into it.  Each failure epoch is simulated by the
+    single-failure event engine on the analytically shifted state; between
+    epochs the application runs balanced at fa.  The failure-during-recovery
+    policy is *quiesce*: a failure arriving while an epoch is open defers to
+    the renewal point, which by exponential memorylessness is equivalent to
+    drawing the gap from the anchor (docs/sweep.md).  After every epoch the
+    runtime takes a coordinated re-synchronization checkpoint and the state
+    re-anchors via ``scenarios.post_recovery_config``.
+
+    ``tests/test_renewal.py`` cross-validates this against the analytic
+    ``sweep.renewal_compose`` pointwise (per epoch, per node).
+    """
+    from repro.core.scenarios import failure_state_at, post_recovery_config, shift_failure
+
+    if any(sv.peer != 0 for sv in cfg.survivors):
+        raise ValueError(
+            f"{cfg.name}: renewal runs require direct blockers (peer == 0)")
+    if any(sv.level != 0 for sv in cfg.survivors):
+        raise ValueError(
+            f"{cfg.name}: renewal runs start from a balanced app (survivor "
+            "levels must be 0; non-fa starts are single-failure inputs)")
+    pt = cfg.profile.power_table
+    p_comp0, p_ckpt0 = float(pt.p_comp[0]), float(pt.p_ckpt[0])
+    dur_fa = cfg.ckpt_duration * float(pt.gamma[0])
+    n_nodes = len(cfg.survivors) + 1
+
+    anchor = cfg
+    t_anchor = 0.0       # wall clock (balanced spans + epochs + resync ckpts)
+    bal_elapsed = 0.0    # balanced-execution time consumed (vs the makespan)
+    balanced = 0.0
+    epochs: list = []
+    e_ref_total = 0.0
+    e_int_total = 0.0
+
+    for k, delta in enumerate(np.asarray(gaps, np.float64)):
+        delta = float(delta)
+        if bal_elapsed + delta > makespan_s:
+            break  # arrivals are monotone: later gaps land past makespan too
+        st = failure_state_at(anchor, delta)
+        shifted = shift_failure(anchor, delta)
+
+        # balanced span up to each node's (snapped) failure instant
+        ages = [sv.ckpt_age for sv in anchor.survivors] + [anchor.t_reexec]
+        delta_effs = list(st.delta_eff) + [st.delta_eff_failed]
+        for age0, d_eff in zip(ages, delta_effs):
+            w, ck = planning.balanced_span(
+                age0, d_eff, anchor.ckpt_interval, anchor.ckpt_duration)
+            balanced += float(w) * p_comp0 + float(ck) * p_ckpt0
+
+        ref = simulate(shifted, intervene=False)
+        act = simulate(shifted, intervene=True)
+        exec_rem = np.array([sv.exec_to_rendezvous for sv in shifted.survivors])
+        t_e = shifted.t_recover + float(np.max(exec_rem))
+        e_ref = np.array([
+            _epoch_node_energy(ref.segments, i + 1, t_e, p_comp0)
+            for i in range(len(exec_rem))])
+        e_int = np.array([
+            _epoch_node_energy(act.segments, i + 1, t_e, p_comp0)
+            for i in range(len(exec_rem))])
+        e_failed = sum(s.energy for s in ref.segments if s.node == _FAILED)
+        # coordinated re-synchronization checkpoint at the renewal point
+        balanced += n_nodes * dur_fa * p_ckpt0
+
+        t_fail = t_anchor + float(st.delta_eff_failed)
+        epochs.append(EpochRecord(
+            index=k,
+            t_fail=t_fail,
+            delta=delta,
+            config=shifted,
+            t_renewal=t_e,
+            energy_ref=e_ref,
+            energy_int=e_int,
+            energy_failed=e_failed,
+            saving=e_ref - e_int,
+            levels=np.array([act.outcomes[i + 1].level for i in range(len(exec_rem))]),
+            wait_actions=[act.outcomes[i + 1].wait_action for i in range(len(exec_rem))],
+        ))
+        e_ref_total += float(e_ref.sum()) + e_failed
+        e_int_total += float(e_int.sum()) + e_failed
+        bal_elapsed += float(st.delta_eff_failed)
+        t_anchor = t_fail + t_e + dur_fa
+        anchor = post_recovery_config(shifted)
+
+    # balanced tail: the rest of the failure-free work (mid-checkpoint snaps
+    # can nudge bal_elapsed slightly past the makespan; clamp)
+    span = max(makespan_s - bal_elapsed, 0.0)
+    if span > 0.0:
+        ages = [sv.ckpt_age for sv in anchor.survivors] + [anchor.t_reexec]
+        for age0 in ages:
+            w, ck = planning.balanced_span(
+                age0, span, anchor.ckpt_interval, anchor.ckpt_duration)
+            balanced += float(w) * p_comp0 + float(ck) * p_ckpt0
+
+    return RunResult(
+        config=cfg,
+        makespan_s=float(makespan_s),
+        epochs=epochs,
+        n_failures=len(epochs),
+        end_time=t_anchor + span,
+        balanced_energy=balanced,
+        energy_ref=e_ref_total + balanced,
+        energy_int=e_int_total + balanced,
+        saving=e_ref_total - e_int_total,
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -13,12 +13,21 @@ Decision semantics (faithful to Algorithm 1 + §3.2):
     margins mu1/mu2): sleep if gated in, otherwise MIN_FREQ for active-wait
     configs / NONE for idle-wait configs;
   * the selected level minimizes EI(f) = E_comp(f) + EI_wait(f);
-  * the reference ENI is case B: fa everywhere, active wait spinning at fa.
+  * the reference ENI is case B: *continue as currently configured* — for
+    the paper's single balanced-application failure that means fa everywhere
+    with the active wait spinning at fa (``ref_level=0``); renewal runs
+    re-evaluate at each failure with survivors' current levels as the
+    reference (``ref_level`` per node), so savings stay incremental.
 
-mu defaults: the paper never publishes mu1/mu2.  mu1=5 is the unique integer
-band consistent with every Table-4 decision (scenario 1 node 1 must NOT sleep
-at a 110 s wait, nodes 2-3 MUST sleep at 230 s, scenario 4 node 2 must not
-sleep at 77 s => mu1 in (3.67, 7.66)); mu2=1.0 (plain "cheaper-than-awake").
+mu defaults: the paper never publishes mu1/mu2.  The Table-4 decisions pin
+mu1 to the open band (110/30, 230/30) ~= (3.67, 7.67): scenario 1 node 1
+must NOT sleep at a 110 s wait (mu1 >= 110/30), nodes 2-3 MUST sleep at
+230 s (mu1 < 230/30), and scenario 4 node 2 must not sleep at 77 s (weaker,
+mu1 >= 2.57).  Any value in the band — including every integer 4..7 —
+reproduces all published decisions; ``evaluate_strategies`` and
+``evaluate_strategies_profile`` both default to the band midpoint mu1=6.0
+(regression-pinned in tests/test_strategies.py::test_mu1_band_and_defaults),
+and mu2=1.0 (plain "cheaper-than-awake").
 """
 from __future__ import annotations
 
@@ -77,6 +86,7 @@ def evaluate_strategies(
     mu1=6.0,
     mu2=1.0,
     per_level_n_ckpt=False,
+    ref_level=0,
 ) -> Decision:
     """Run Algorithm 1 for a batch of surviving nodes.
 
@@ -85,12 +95,21 @@ def evaluate_strategies(
     With ``per_level_n_ckpt`` the checkpoint count carries a trailing ladder
     axis (..., F) — used by planners that predict timer/move-ahead
     checkpoints per candidate frequency.
+
+    ``ref_level`` is each node's *current* ladder level: the reference ENI
+    runs compute/checkpoints/active-wait there (the paper's hardcoded fa
+    baseline is the ``ref_level=0`` special case), ``comp_changed`` compares
+    against it, and the no-feasible-level fallback keeps it.  Renewal runs
+    pass survivors' live levels so a re-evaluation mid-intervention measures
+    savings against what the node is actually doing, not a counterfactual fa
+    run.
     """
     t_comp_fa, t_failed, wait_mode = jnp.broadcast_arrays(
         jnp.asarray(t_comp_fa, jnp.float32),
         jnp.asarray(t_failed, jnp.float32),
         jnp.asarray(wait_mode, jnp.int32),
     )
+    ref_level = jnp.broadcast_to(jnp.asarray(ref_level, jnp.int32), t_comp_fa.shape)
     n_ckpt = jnp.asarray(n_ckpt, jnp.float32)
     if not per_level_n_ckpt:
         n_ckpt = jnp.broadcast_to(n_ckpt, t_comp_fa.shape)
@@ -100,22 +119,21 @@ def evaluate_strategies(
     )
     level = jnp.argmin(ei["total"], axis=-1)
     # per-level arrays may carry fewer batch dims than the selection (e.g. a
-    # leading mu-band axis enters only through the sleep gate): broadcast up
-    # before gathering.
-    take = lambda a: jnp.take_along_axis(
-        jnp.broadcast_to(a, level.shape + a.shape[-1:]), level[..., None], axis=-1
-    )[..., 0]
+    # leading mu-band axis enters only through the sleep gate); take_level
+    # broadcasts both operands before gathering.
+    take = lambda a: em.take_level(a, level)
 
-    n_ckpt_ref = n_ckpt[..., 0] if per_level_n_ckpt else n_ckpt
     eni = em.reference_energy(
-        t_comp_fa, t_failed, n_ckpt_ref, t_ckpt, ladder, wait_mode, p_idle_wait
+        t_comp_fa, t_failed, n_ckpt, t_ckpt, ladder, wait_mode, p_idle_wait,
+        per_level_n_ckpt=per_level_n_ckpt, ref_level=ref_level,
     )
     e_sel = take(ei["total"])
     feasible_any = jnp.any(ei["feasible"], axis=-1)
     # If nothing is feasible (can't happen when fa is feasible by
-    # construction, but guard numerically) fall back to the reference.
+    # construction, but guard numerically) fall back to the reference:
+    # keep the node's current level and take no action.
     e_sel = jnp.where(feasible_any, e_sel, eni)
-    level = jnp.where(feasible_any, level, 0)
+    level = jnp.where(feasible_any, level, jnp.broadcast_to(ref_level, level.shape))
 
     sleeps = take(ei["sleeps"]) & feasible_any
     active = wait_mode == em.WaitMode.ACTIVE
@@ -132,7 +150,7 @@ def evaluate_strategies(
     return Decision(
         level=level.astype(jnp.int32),
         freq_ghz=ladder.freq_ghz[level],
-        comp_changed=level != 0,
+        comp_changed=level != ref_level,
         wait_action=wait_action,
         comp_time=take(ei["comp_t"]),
         wait_time=take(ei["wait_t"]),
@@ -154,6 +172,7 @@ def evaluate_strategies_profile(
     mu1=6.0,
     mu2=1.0,
     per_level_n_ckpt=False,
+    ref_level=0,
 ) -> Decision:
     """Convenience wrapper taking a MachineProfile."""
     ladder = em.LadderArrays.from_table(profile.power_table)
@@ -161,4 +180,5 @@ def evaluate_strategies_profile(
     return evaluate_strategies(
         t_comp_fa, t_failed, n_ckpt, t_ckpt, ladder, sleep, wait_mode,
         profile.p_idle_wait, mu1=mu1, mu2=mu2, per_level_n_ckpt=per_level_n_ckpt,
+        ref_level=ref_level,
     )

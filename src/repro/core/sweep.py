@@ -30,6 +30,16 @@ On top of the dense grid sit exponential-MTBF Monte-Carlo sampling
 key) and summary statistics (``summarize``: mean/p5/p95 saving, sleep-gate
 occupancy, infeasibility rate).
 
+The renewal layer (``renewal_failure_gaps`` / ``renewal_compose`` /
+``renewal_monte_carlo``) extends the single-failure view to *whole runs*
+with repeated failures: per-node exponential failure sequences over an
+application makespan, each failure handled as a paper epoch, state
+re-anchored after every recovery (``scenarios.post_recovery_config``), and
+whole-run energy composed from the closed-form sawtooth + one jitted
+Algorithm-1 dispatch across every (run, epoch, survivor) point.
+Cross-validated pointwise against ``simulator.simulate_run`` in
+tests/test_renewal.py; semantics in docs/sweep.md.
+
 Semantics notes (also in docs/sweep.md):
   * failure instants landing inside a node's checkpoint snap forward to the
     checkpoint's end (per node) — see ``advance_checkpoint_sawtooth``;
@@ -59,12 +69,17 @@ __all__ = [
     "SweepResult",
     "SweepSummary",
     "MonteCarloSummary",
+    "RenewalResult",
+    "RenewalMonteCarloSummary",
     "sweep_inputs",
     "sweep_failure_times",
     "sweep_scenarios",
     "summarize",
     "exponential_failure_offsets",
     "monte_carlo",
+    "renewal_failure_gaps",
+    "renewal_compose",
+    "renewal_monte_carlo",
 ]
 
 SECONDS_PER_YEAR = 365.25 * 24 * 3600.0
@@ -310,24 +325,40 @@ def summarize(res: SweepResult) -> SweepSummary:
     """Reduce a sweep (any batch shape) to summary statistics.
 
     Points where a chained survivor wrapped past its peer (``chain_ok``
-    False) carry meaningless savings; they are reported in
-    ``chain_violation_rate`` rather than silently averaged over — a nonzero
-    rate means the statistics need a chain-aware reading.
+    False) carry meaningless savings (module docstring); they are *excluded*
+    from every statistic and reported only through
+    ``chain_violation_rate``.  ``points`` counts the full grid; all other
+    fields are over the chain-valid subset (NaN when nothing is valid).
     """
     d = res.decision
     saving = np.asarray(d.saving, np.float64)
-    actions = np.asarray(d.wait_action)
+    # decision arrays may carry extra leading batch dims (e.g. a mu-band)
+    # that the geometry does not: broadcast the validity mask up.
+    ok = np.broadcast_to(np.asarray(res.chain_ok, bool), saving.shape)
+    valid = ok.reshape(-1)
+    pick = lambda a: np.asarray(a).reshape(-1)[valid]
+    saving = saving.reshape(-1)[valid]
+    actions = pick(d.wait_action)
+    if saving.size == 0:
+        nan = float("nan")
+        return SweepSummary(
+            points=int(ok.size), mean_saving_j=nan, p5_saving_j=nan,
+            p95_saving_j=nan, mean_saving_pct=nan, sleep_occupancy=nan,
+            min_freq_rate=nan, comp_change_rate=nan, infeasible_rate=nan,
+            mean_wait_s=nan,
+            chain_violation_rate=float(np.mean(~np.asarray(res.chain_ok))),
+        )
     return SweepSummary(
-        points=int(saving.size),
+        points=int(ok.size),
         mean_saving_j=float(saving.mean()),
         p5_saving_j=float(np.percentile(saving, 5)),
         p95_saving_j=float(np.percentile(saving, 95)),
-        mean_saving_pct=float(np.asarray(d.saving_pct).mean()),
+        mean_saving_pct=float(pick(d.saving_pct).mean()),
         sleep_occupancy=float(np.mean(actions == em.WaitAction.SLEEP)),
         min_freq_rate=float(np.mean(actions == em.WaitAction.MIN_FREQ)),
-        comp_change_rate=float(np.mean(np.asarray(d.comp_changed))),
-        infeasible_rate=float(np.mean(~np.asarray(d.feasible_any))),
-        mean_wait_s=float(np.asarray(d.wait_time).mean()),
+        comp_change_rate=float(np.mean(pick(d.comp_changed))),
+        infeasible_rate=float(np.mean(~pick(d.feasible_any))),
+        mean_wait_s=float(pick(d.wait_time).mean()),
         chain_violation_rate=float(np.mean(~np.asarray(res.chain_ok))),
     )
 
@@ -442,4 +473,322 @@ def monte_carlo(
         infeasible_rate=float(np.mean(~np.asarray(d.feasible_any))),
         annual_saving_j=mean_saving * failures_per_year,
         annual_saving_by_strategy=by_strategy,
+    )
+
+
+# ---------------------------------------------------------------------------
+# renewal process: whole-run energy across repeated failures
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RenewalResult:
+    """Per-epoch decisions + whole-run energy for a batch of renewal runs.
+
+    ``decision`` fields are jax arrays of shape (R, K, N) — runs x failure
+    epochs x survivors; the geometry and energy fields are host float64.
+    Epochs past a run's last failure (``valid`` False) hold placeholder
+    values and are excluded from every total.
+    """
+
+    decision: strategies.Decision
+    valid: np.ndarray        # (R, K) bool: epoch k occurred in run r
+    gaps: np.ndarray         # (R, K) balanced-execution gaps as evaluated
+    t_fail: np.ndarray       # (R, K) absolute (snapped) failure instants
+    exec_rem: np.ndarray     # (R, K, N) survivor work-to-rendezvous at failure
+    t_failed: np.ndarray     # (R, K, N) eq. 14 per epoch
+    t_renewal: np.ndarray    # (R, K) epoch duration T_E
+    failed_node: np.ndarray  # (R, K) which node failed (labeling only)
+    n_failures: np.ndarray   # (R,)
+    truncated: np.ndarray    # (R,) bool: exhausted max_failures before makespan
+    end_time: np.ndarray     # (R,) wall end of the run (>= makespan)
+    balanced_energy: np.ndarray  # (R,) inter-failure + resync-ckpt + tail (J)
+    epoch_ref: np.ndarray    # (R, K, N) per-survivor epoch energy, reference
+    epoch_int: np.ndarray    # (R, K, N) per-survivor epoch energy, intervened
+    epoch_failed: np.ndarray  # (R, K) failed-node epoch energy (both runs)
+    energy_ref: np.ndarray   # (R,) whole-run reference energy
+    energy_int: np.ndarray   # (R,) whole-run intervened energy
+    saving: np.ndarray       # (R,) energy_ref - energy_int
+
+
+def renewal_failure_gaps(
+    key: jax.Array,
+    n_runs: int,
+    n_nodes: int,
+    max_failures: int,
+    mtbf_s: float,
+):
+    """Per-node exponential failure sequences, reduced to renewal-epoch gaps.
+
+    Each of the ``n_nodes`` nodes fails as an independent Poisson process
+    with the given per-node MTBF.  Under the quiesce policy (a failure
+    arriving while an epoch is open defers to the renewal point) the
+    exponential's memorylessness makes the deferred process equivalent to
+    redrawing every node's time-to-failure at each renewal anchor — so the
+    epoch gap is the minimum of ``n_nodes`` fresh draws and the failing node
+    is the argmin.  Returns ``(gaps, failed_node)`` of shape
+    ``(n_runs, max_failures)``, float64/int64.
+    """
+    draws = np.asarray(
+        jax.random.exponential(key, (n_runs, max_failures, n_nodes)), np.float64
+    ) * float(mtbf_s)
+    return draws.min(axis=-1), draws.argmin(axis=-1)
+
+
+def renewal_compose(cfg: ScenarioConfig, gaps, makespan_s: float,
+                    failed_node=None) -> RenewalResult:
+    """Compose whole-run multi-failure energy analytically.
+
+    ``gaps`` (R, K) or (K,) are balanced-execution wall seconds between each
+    renewal anchor and the next failure; ``makespan_s`` is the application's
+    failure-free length, so epoch ``k`` of run ``r`` occurs only while the
+    balanced time consumed so far plus ``gaps[r, k]`` stays within it
+    (recovery epochs extend the wall end instead of eating the makespan).
+    The per-epoch state is
+    the closed-form sawtooth advanced from the previous renewal anchor
+    (ages and the lost-work sawtooth restart at zero after each epoch's
+    coordinated re-synchronization checkpoint — ``scenarios.
+    post_recovery_config`` semantics), the geometry recursion runs in host
+    float64, and Algorithm 1 evaluates every (run, epoch, survivor) point in
+    a single jitted dispatch.  Cross-validated pointwise against
+    ``simulator.simulate_run`` in tests/test_renewal.py.
+    """
+    if any(sv.peer != 0 for sv in cfg.survivors):
+        raise ValueError(
+            f"{cfg.name}: renewal composition requires direct blockers (peer == 0)")
+    ages0 = np.array([s.ckpt_age for s in cfg.survivors], np.float64)
+    if np.any(ages0 > cfg.ckpt_interval) or cfg.t_reexec > cfg.ckpt_interval:
+        raise ValueError(
+            f"{cfg.name}: ckpt_age/t_reexec exceed ckpt_interval")
+    if any(s.level != 0 for s in cfg.survivors):
+        raise ValueError(
+            f"{cfg.name}: renewal composition starts from a balanced app "
+            "(survivor levels must be 0; non-fa starts are single-failure inputs)")
+
+    gaps = np.atleast_2d(np.asarray(gaps, np.float64))            # (R, K)
+    n_runs, max_failures = gaps.shape
+    n = len(cfg.survivors)
+    pt = cfg.profile.power_table
+    p_comp0, p_ckpt0 = float(pt.p_comp[0]), float(pt.p_ckpt[0])
+    beta0, gamma0 = float(pt.beta[0]), float(pt.gamma[0])
+    dur_fa = cfg.ckpt_duration * gamma0
+    n_nodes = n + 1
+    interval, dur = cfg.ckpt_interval, cfg.ckpt_duration
+    period = np.array([s.rendezvous_period for s in cfg.survivors], np.float64)
+    if failed_node is None:
+        failed_node = np.zeros((n_runs, max_failures), np.int64)
+    failed_node = np.broadcast_to(
+        np.asarray(failed_node, np.int64), (n_runs, max_failures))
+
+    # --- host float64 geometry recursion (decision-independent) ------------
+    exec_anchor = np.broadcast_to(
+        np.array([s.exec_to_rendezvous for s in cfg.survivors], np.float64),
+        (n_runs, n)).copy()
+    ages = np.broadcast_to(ages0, (n_runs, n)).copy()
+    reexec_age = np.full(n_runs, float(cfg.t_reexec))
+    t_anchor = np.zeros(n_runs)      # wall clock (balanced + epochs + resyncs)
+    bal_elapsed = np.zeros(n_runs)   # balanced time consumed (vs the makespan)
+    alive = np.ones(n_runs, bool)
+    balanced = np.zeros(n_runs)
+
+    valid = np.zeros((n_runs, max_failures), bool)
+    t_fail = np.zeros((n_runs, max_failures))
+    exec_rem_k = np.zeros((n_runs, max_failures, n))
+    t_failed_k = np.zeros((n_runs, max_failures, n))
+    t_renewal_k = np.zeros((n_runs, max_failures))
+    n_ckpt_k = np.zeros((n_runs, max_failures, n, len(pt.beta)))
+    epoch_failed = np.zeros((n_runs, max_failures))
+    ct_ref_k = np.zeros((n_runs, max_failures, n))  # comp duration at fa
+
+    for k in range(max_failures):
+        delta = gaps[:, k]
+        occurs = alive & (bal_elapsed + delta <= makespan_s)
+        if not occurs.any():
+            alive &= occurs
+            continue
+        age_f, work, _, d_eff = planning.advance_checkpoint_sawtooth(
+            ages, delta[:, None], interval, dur)                 # (R, N)
+        rem = np.mod(exec_anchor - work, period)
+        exec_rem = np.where(rem == 0.0, period, rem)
+        reexec_f, _, _, d_eff_fail = planning.advance_checkpoint_sawtooth(
+            reexec_age, delta, interval, dur)                    # (R,)
+        t_recover = cfg.t_down + cfg.t_restart + reexec_f
+        t_failed = t_recover[:, None] + exec_rem
+
+        # balanced span energy up to each node's (snapped) failure instant
+        w_s, ck_s = planning.balanced_span(ages, d_eff, interval, dur)
+        w_f, ck_f = planning.balanced_span(reexec_age, d_eff_fail, interval, dur)
+        e_bal = (w_s * p_comp0 + ck_s * p_ckpt0).sum(axis=-1) \
+            + w_f * p_comp0 + ck_f * p_ckpt0
+        balanced += np.where(occurs, e_bal + n_nodes * dur_fa * p_ckpt0, 0.0)
+
+        plan = planning.checkpoint_plan(
+            exec_rem, age_f, t_failed,
+            interval=interval, dur=dur, beta=pt.beta, gamma=pt.gamma,
+            move_ahead=cfg.move_ahead, move_frac=cfg.move_ahead_frac)
+        p_star = exec_rem.max(axis=-1)
+        t_e = t_recover + p_star
+        # failed node over [failure, T_E]: down (0 W) + restart at P_ckpt +
+        # re-execution and post-recovery serving at P_comp
+        epoch_failed[:, k] = np.where(
+            occurs, cfg.t_restart * p_ckpt0 + (reexec_f + p_star) * p_comp0, 0.0)
+
+        valid[:, k] = occurs
+        t_fail[:, k] = np.where(occurs, t_anchor + d_eff_fail, 0.0)
+        exec_rem_k[:, k] = exec_rem
+        t_failed_k[:, k] = t_failed
+        t_renewal_k[:, k] = np.where(occurs, t_e, 0.0)
+        n_ckpt_k[:, k] = np.asarray(plan.n_ckpt)
+        ct_ref_k[:, k] = exec_rem * beta0 + np.asarray(plan.n_ckpt)[..., 0] * dur * gamma0
+
+        # re-anchor: coordinated resync checkpoint -> ages 0, progress P*
+        gap_wrap = np.mod(p_star[:, None] - exec_rem, period)
+        exec_next = np.where(gap_wrap == 0.0, period, period - gap_wrap)
+        exec_anchor = np.where(occurs[:, None], exec_next, exec_anchor)
+        ages = np.where(occurs[:, None], 0.0, ages)
+        reexec_age = np.where(occurs, 0.0, reexec_age)
+        bal_elapsed = np.where(occurs, bal_elapsed + d_eff_fail, bal_elapsed)
+        t_anchor = np.where(occurs, t_fail[:, k] + t_e + dur_fa, t_anchor)
+        alive &= occurs
+
+    # balanced tail: the rest of the failure-free work (mid-checkpoint snaps
+    # can nudge bal_elapsed slightly past the makespan; clamp)
+    span = np.maximum(makespan_s - bal_elapsed, 0.0)
+    w_s, ck_s = planning.balanced_span(ages, span[:, None], interval, dur)
+    w_f, ck_f = planning.balanced_span(reexec_age, span, interval, dur)
+    balanced += (w_s * p_comp0 + ck_s * p_ckpt0).sum(axis=-1) \
+        + w_f * p_comp0 + ck_f * p_ckpt0
+
+    # --- one jitted Algorithm-1 dispatch over every (run, epoch, node) -----
+    inp = sweep_inputs(cfg)
+    decision = strategies.evaluate_strategies(
+        jnp.asarray(exec_rem_k, jnp.float32),
+        jnp.asarray(t_failed_k, jnp.float32),
+        jnp.asarray(n_ckpt_k, jnp.float32),
+        inp.dur, inp.ladder, inp.sleep, inp.wait_mode, inp.p_idle_wait,
+        mu1=inp.mu1, mu2=inp.mu2, per_level_n_ckpt=True,
+    )
+
+    # per-survivor epoch energy = window energy + trailing fa span to T_E
+    # (the trailing end is max(t_failed, comp duration): an overrunning
+    # reference comp phase — the sweep engine's "infeasible pockets" — eats
+    # into the trailing span exactly as the event timeline does)
+    eni = np.asarray(decision.energy_reference, np.float64)
+    ei = np.asarray(decision.energy_intervened, np.float64)
+    ct_sel = np.asarray(decision.comp_time, np.float64)
+    t_e3 = t_renewal_k[:, :, None]
+    trail_ref = np.maximum(t_e3 - np.maximum(t_failed_k, ct_ref_k), 0.0) * p_comp0
+    trail_int = np.maximum(t_e3 - np.maximum(t_failed_k, ct_sel), 0.0) * p_comp0
+    v3 = valid[:, :, None]
+    epoch_ref = np.where(v3, eni + trail_ref, 0.0)
+    epoch_int = np.where(v3, ei + trail_int, 0.0)
+
+    energy_ref = balanced + epoch_ref.sum(axis=(1, 2)) + epoch_failed.sum(axis=1)
+    energy_int = balanced + epoch_int.sum(axis=(1, 2)) + epoch_failed.sum(axis=1)
+    return RenewalResult(
+        decision=decision,
+        valid=valid,
+        gaps=gaps,
+        t_fail=t_fail,
+        exec_rem=exec_rem_k,
+        t_failed=t_failed_k,
+        t_renewal=t_renewal_k,
+        failed_node=np.where(valid, failed_node, -1),
+        n_failures=valid.sum(axis=1),
+        truncated=alive & (bal_elapsed < makespan_s),
+        end_time=t_anchor + span,
+        balanced_energy=balanced,
+        epoch_ref=epoch_ref,
+        epoch_int=epoch_int,
+        epoch_failed=epoch_failed,
+        energy_ref=energy_ref,
+        energy_int=energy_int,
+        saving=energy_ref - energy_int,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class RenewalMonteCarloSummary:
+    """Whole-run expectation view of a scenario under repeated failures."""
+
+    n_runs: int
+    makespan_s: float
+    mtbf_s: float               # per-node MTBF
+    max_failures: int
+    # failure-count distribution over runs
+    mean_failures: float
+    failure_count_hist: dict    # n_failures -> fraction of runs
+    per_node_failures: tuple    # mean failures per node over the makespan
+    truncated_rate: float       # runs that hit max_failures before makespan
+    # whole-run energies (J)
+    mean_energy_ref_j: float
+    mean_energy_int_j: float
+    mean_saving_j: float
+    p5_saving_j: float
+    p95_saving_j: float
+    mean_saving_pct: float      # 100 * E[saving] / E[reference energy]
+    # action occupancy over valid (run, epoch, node) points
+    sleep_occupancy: float
+    min_freq_rate: float
+    comp_change_rate: float
+    infeasible_rate: float
+    # expected savings scaled to a year of operation
+    annual_saving_j: float
+
+
+def renewal_monte_carlo(
+    cfg: ScenarioConfig,
+    key: jax.Array,
+    n_runs: int = 256,
+    makespan_s: float = 30 * 24 * 3600.0,
+    mtbf_s: float = 14 * 24 * 3600.0,
+    max_failures: int = 64,
+) -> RenewalMonteCarloSummary:
+    """Monte-Carlo whole-run energy under per-node exponential failures.
+
+    Samples ``n_runs`` failure histories (``renewal_failure_gaps``:
+    independent Poisson failures per node, quiesce policy for arrivals
+    during an open epoch), composes each run analytically
+    (``renewal_compose``), and reduces to whole-run expectations.
+    Deterministic for a fixed ``key``.  ``makespan_s`` is the application's
+    balanced-execution wall length; recovery epochs extend the wall end
+    beyond it (``RenewalResult.end_time``).
+    """
+    n_nodes = len(cfg.survivors) + 1
+    gaps, failed = renewal_failure_gaps(key, n_runs, n_nodes, max_failures, mtbf_s)
+    res = renewal_compose(cfg, gaps, makespan_s, failed_node=failed)
+    counts = res.n_failures
+    hist = {int(c): float(np.mean(counts == c)) for c in np.unique(counts)}
+    per_node = tuple(
+        float(np.mean(np.sum((res.failed_node == m) & res.valid, axis=1)))
+        for m in range(n_nodes))
+    v = res.valid[:, :, None] & np.ones(len(cfg.survivors), bool)
+    actions = np.asarray(res.decision.wait_action)[v.nonzero()] \
+        if v.any() else np.array([])
+    pick = lambda a: np.asarray(a)[v.nonzero()]
+    mean_ref = float(res.energy_ref.mean())
+    mean_saving = float(res.saving.mean())
+    return RenewalMonteCarloSummary(
+        n_runs=n_runs,
+        makespan_s=float(makespan_s),
+        mtbf_s=float(mtbf_s),
+        max_failures=max_failures,
+        mean_failures=float(counts.mean()),
+        failure_count_hist=hist,
+        per_node_failures=per_node,
+        truncated_rate=float(np.mean(res.truncated)),
+        mean_energy_ref_j=mean_ref,
+        mean_energy_int_j=float(res.energy_int.mean()),
+        mean_saving_j=mean_saving,
+        p5_saving_j=float(np.percentile(res.saving, 5)),
+        p95_saving_j=float(np.percentile(res.saving, 95)),
+        mean_saving_pct=float(100.0 * mean_saving / max(mean_ref, 1e-9)),
+        sleep_occupancy=float(np.mean(actions == em.WaitAction.SLEEP))
+        if actions.size else 0.0,
+        min_freq_rate=float(np.mean(actions == em.WaitAction.MIN_FREQ))
+        if actions.size else 0.0,
+        comp_change_rate=float(np.mean(pick(res.decision.comp_changed)))
+        if actions.size else 0.0,
+        infeasible_rate=float(np.mean(~pick(res.decision.feasible_any)))
+        if actions.size else 0.0,
+        annual_saving_j=mean_saving * SECONDS_PER_YEAR / float(makespan_s),
     )

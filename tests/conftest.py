@@ -4,10 +4,23 @@ Registers the deterministic ``hypothesis`` fallback (tests/_hypothesis_fallback.
 when the real library is absent, so the property-based modules collect and run
 in dependency-free environments.  CI installs real hypothesis from
 ``pyproject.toml [dev]`` and this shim stays dormant there.
+
+Also enables JAX's persistent compilation cache under ``tests/.jax_cache``:
+the suite's wall time is dominated by XLA compiles (model smoke tests,
+Pallas kernels, the jitted sweep engine), and caching them across pytest
+processes cuts warm reruns by minutes.  CI restores the directory via
+actions/cache; locally the first run pays the compiles once.
 """
+import os
 import pathlib
 import sys
 import types
+
+os.environ.setdefault(
+    "JAX_COMPILATION_CACHE_DIR",
+    str(pathlib.Path(__file__).resolve().parent / ".jax_cache"))
+os.environ.setdefault("JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS", "0.7")
+os.environ.setdefault("JAX_PERSISTENT_CACHE_MIN_ENTRY_SIZE_BYTES", "-1")
 
 try:
     import hypothesis  # noqa: F401

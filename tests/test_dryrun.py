@@ -58,7 +58,12 @@ def test_artifacts_cover_grid_if_present():
     for mesh, devices in (("single", 256), ("multi", 512)):
         path = art / f"dryrun_{mesh}.json"
         if not path.exists():
-            pytest.skip(f"{path} not generated yet")
+            pytest.xfail(
+                f"blocked: {path} is not committed — generating it requires "
+                "the full 33-cell grid compile (PYTHONPATH=src python -m "
+                "repro.launch.dryrun --all with 512 virtual XLA devices, "
+                "~30 min); the single-cell dry-run tests above cover the "
+                "pipeline until an artifact-producing run lands")
         recs = json.loads(path.read_text())
         cells = {(r["arch"], r["shape"]) for r in recs}
         assert cells == set(grid()), f"{mesh}: missing {set(grid()) - cells}"

@@ -41,6 +41,10 @@ def test_flash_attention_matches_oracle(case):
                                np.asarray(exp, np.float32), atol=tol, rtol=tol)
 
 
+# the hypothesis property sweeps compile a fresh Pallas kernel per drawn
+# shape (~1.5 s each on CPU): slow tier.  The fixed oracle grids above keep
+# per-kernel coverage in the default tier.
+@pytest.mark.slow
 @settings(max_examples=10, deadline=None)
 @given(st.tuples(
     st.sampled_from([1, 2]),
@@ -137,6 +141,7 @@ def test_ssd_matches_naive_recurrence():
     np.testing.assert_allclose(np.asarray(y), outs, atol=2e-3, rtol=1e-3)
 
 
+@pytest.mark.slow
 @settings(max_examples=8, deadline=None)
 @given(st.tuples(
     st.sampled_from([1, 2]),

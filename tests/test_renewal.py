@@ -1,0 +1,253 @@
+"""Multi-failure renewal engine tests.
+
+The load-bearing check mirrors tests/test_sweep.py one level up: the
+analytic whole-run composition (``sweep.renewal_compose`` — closed-form
+sawtooth geometry re-anchored after every recovery + one jitted Algorithm-1
+dispatch) must agree *pointwise* (per epoch, per survivor) with the
+multi-failure event simulator (``simulator.simulate_run``) on every Table-4
+scenario with >= 2 injected failures per run.  The two paths share the
+closed-form checkpoint plan but integrate epoch energy completely
+differently, so agreement validates the renewal re-anchoring, the epoch
+energy accounting, and the decision coherence at once.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import energy_model as em
+from repro.core import planning, strategies, sweep
+from repro.core.scenarios import (
+    failure_state_at,
+    paper_scenarios,
+    post_recovery_config,
+    shift_failure,
+)
+from repro.core.simulator import NodeStart, ScenarioConfig, simulate, simulate_run
+
+# >= 2 failures per run on every scenario; last gap lands past the makespan
+# for the short-recovery scenarios only with MAKESPAN below, exercising the
+# drop-at-makespan path without losing the >= 2 bar.
+GAPS = np.array([5000.0, 9000.0, 4000.0, 2500.0])
+MAKESPAN = 60000.0
+
+
+# ---------------------------------------------------------------------------
+# cross-validation: analytic renewal composition == multi-failure event sim
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(paper_scenarios()))
+def test_renewal_matches_event_simulator_pointwise(name):
+    """Acceptance bar: per-epoch, per-survivor energies within 1e-4 relative
+    of the multi-failure event simulator, >= 2 injected failures per run."""
+    cfg = paper_scenarios()[name]
+    run = simulate_run(cfg, GAPS, MAKESPAN)
+    res = sweep.renewal_compose(cfg, GAPS, MAKESPAN)
+    assert run.n_failures >= 2, name
+    assert run.n_failures == int(res.n_failures[0])
+    for k, ep in enumerate(run.epochs):
+        np.testing.assert_allclose(
+            res.epoch_ref[0, k], ep.energy_ref, rtol=1e-4, err_msg=f"{name} ref k={k}")
+        np.testing.assert_allclose(
+            res.epoch_int[0, k], ep.energy_int, rtol=1e-4, err_msg=f"{name} int k={k}")
+        np.testing.assert_allclose(
+            res.epoch_failed[0, k], ep.energy_failed, rtol=1e-4)
+        np.testing.assert_array_equal(
+            np.asarray(res.decision.level)[0, k], ep.levels, err_msg=f"{name} k={k}")
+        assert [int(a) for a in np.asarray(res.decision.wait_action)[0, k]] == [
+            int(a) for a in ep.wait_actions], (name, k)
+    np.testing.assert_allclose(res.energy_ref[0], run.energy_ref, rtol=1e-4)
+    np.testing.assert_allclose(res.energy_int[0], run.energy_int, rtol=1e-4)
+    np.testing.assert_allclose(res.balanced_energy[0], run.balanced_energy, rtol=1e-4)
+    denom = max(abs(run.saving), 1e-4 * run.energy_ref)
+    assert abs(res.saving[0] - run.saving) / denom < 1e-4, name
+
+
+def test_renewal_first_epoch_equals_single_failure_sweep():
+    """Epoch 0 of a renewal run is exactly the single-failure sweep at that
+    offset — the renewal engine strictly generalizes PR 1's engine."""
+    cfg = paper_scenarios()["scenario2_long_reexec"]
+    delta = 4321.0
+    res = sweep.renewal_compose(cfg, np.array([delta, 1e9]), 1e7)
+    single = sweep.sweep_failure_times(cfg, np.array([delta]))
+    np.testing.assert_array_equal(
+        np.asarray(res.decision.level)[0, 0], np.asarray(single.decision.level)[0])
+    np.testing.assert_allclose(
+        np.asarray(res.decision.saving)[0, 0],
+        np.asarray(single.decision.saving)[0], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# non-fa reference state (strategy-state fix)
+# ---------------------------------------------------------------------------
+
+def test_nonfa_start_levels_cross_validate():
+    """A failure landing while survivors still hold non-fa levels: predicted
+    savings (Algorithm 1 with ref_level) match the event simulator, whose
+    reference run now continues at the current levels instead of fa."""
+    cfg = paper_scenarios()["scenario2_long_reexec"]
+    start = (1, 0, 2)
+    cfg = dataclasses.replace(cfg, survivors=tuple(
+        dataclasses.replace(sv, level=l) for sv, l in zip(cfg.survivors, start)))
+    ref = simulate(cfg, intervene=False)
+    act = simulate(cfg, intervene=True)
+    for i, node in enumerate(sorted(act.outcomes)):
+        o = act.outcomes[node]
+        measured = ref.outcomes[node].energy - o.energy
+        predicted = o.predicted_saving
+        denom = max(abs(measured), 0.01 * ref.outcomes[node].energy)
+        assert abs(predicted - measured) / denom < 0.01, (node, predicted, measured)
+    # the reference run actually executes at the start levels
+    for i, node in enumerate(sorted(ref.outcomes)):
+        assert ref.outcomes[node].level == start[i]
+
+
+def test_ref_level_changes_the_baseline():
+    """ENI at a slowed reference level differs from the fa baseline, and the
+    infeasible fallback keeps the current level instead of forcing fa."""
+    profile = paper_scenarios()["scenario1_short_reexec"].profile
+    d_fa = strategies.evaluate_strategies_profile(
+        profile, 500.0, 1000.0, 0.0, 120.0, int(em.WaitMode.ACTIVE))
+    d_cur = strategies.evaluate_strategies_profile(
+        profile, 500.0, 1000.0, 0.0, 120.0, int(em.WaitMode.ACTIVE), ref_level=2)
+    assert float(d_fa.energy_reference) != float(d_cur.energy_reference)
+    # nothing feasible: t_failed shorter than even the fa comp phase
+    d_inf = strategies.evaluate_strategies_profile(
+        profile, 500.0, 100.0, 0.0, 120.0, int(em.WaitMode.ACTIVE), ref_level=2)
+    assert not bool(d_inf.feasible_any)
+    assert int(d_inf.level) == 2              # keep the current level
+    assert not bool(d_inf.comp_changed)
+    assert float(d_inf.saving) == 0.0
+
+
+def test_take_level_gathers_ladder_axis():
+    a = np.arange(24, dtype=np.float32).reshape(2, 3, 4)
+    lvl = np.array([[0, 1, 2], [3, 0, 1]])
+    out = np.asarray(em.take_level(a, lvl))
+    expect = np.take_along_axis(a, lvl[..., None], axis=-1)[..., 0]
+    np.testing.assert_array_equal(out, expect)
+
+
+# ---------------------------------------------------------------------------
+# renewal re-anchoring semantics
+# ---------------------------------------------------------------------------
+
+def test_post_recovery_config_is_balanced():
+    cfg = paper_scenarios()["scenario1_short_reexec"]
+    shifted = shift_failure(cfg, 1234.0)
+    anchor = post_recovery_config(shifted)
+    exec_rem = np.array([s.exec_to_rendezvous for s in shifted.survivors])
+    p_star = exec_rem.max()
+    for sv, e in zip(anchor.survivors, exec_rem):
+        assert sv.ckpt_age == 0.0 and sv.level == 0
+        assert 0.0 < sv.exec_to_rendezvous <= sv.rendezvous_period
+        # next rendezvous is the first period multiple past P*
+        k = np.ceil((p_star - e) / sv.rendezvous_period + 1e-12)
+        np.testing.assert_allclose(
+            sv.exec_to_rendezvous, e + k * sv.rendezvous_period - p_star)
+    assert anchor.t_reexec == 0.0
+
+
+def test_post_recovery_rejects_chained_topology():
+    cfg = ScenarioConfig(
+        name="chain",
+        survivors=(NodeStart(exec_to_rendezvous=300.0, ckpt_age=10.0),
+                   NodeStart(exec_to_rendezvous=420.0, ckpt_age=10.0, peer=1)),
+        t_down=60.0, t_restart=60.0, t_reexec=100.0,
+    )
+    with pytest.raises(ValueError, match="direct blockers"):
+        post_recovery_config(cfg)
+    with pytest.raises(ValueError, match="direct blockers"):
+        sweep.renewal_compose(cfg, GAPS, MAKESPAN)
+    with pytest.raises(ValueError, match="direct blockers"):
+        simulate_run(cfg, GAPS, MAKESPAN)
+    # non-fa start levels are single-failure inputs, not renewal inputs:
+    # both engines must refuse identically
+    slowed = paper_scenarios()["scenario4_short_active_waits"]
+    slowed = dataclasses.replace(slowed, survivors=tuple(
+        dataclasses.replace(sv, level=1) for sv in slowed.survivors))
+    with pytest.raises(ValueError, match="balanced"):
+        sweep.renewal_compose(slowed, GAPS, MAKESPAN)
+    with pytest.raises(ValueError, match="balanced"):
+        simulate_run(slowed, GAPS, MAKESPAN)
+
+
+def test_balanced_span_partitions_exactly():
+    """work + checkpoint time == span, and at snapped failure instants the
+    work agrees with the sawtooth closed form."""
+    age0, interval, dur = 60.0, 1800.0, 120.0
+    for span in (0.0, 100.0, 1740.0, 1800.0, 1860.0, 5000.0, 40000.0):
+        w, ck = planning.balanced_span(age0, span, interval, dur)
+        np.testing.assert_allclose(w + ck, span)
+        assert w >= 0.0 and ck >= 0.0
+    _, work, _, d_eff = planning.advance_checkpoint_sawtooth(
+        age0, 5000.0, interval, dur)
+    w, ck = planning.balanced_span(age0, d_eff, interval, dur)
+    np.testing.assert_allclose(w, work)
+
+
+def test_renewal_makespan_drops_late_failures():
+    cfg = paper_scenarios()["scenario4_short_active_waits"]
+    # second gap arrives past the makespan: exactly one epoch
+    res = sweep.renewal_compose(cfg, np.array([2000.0, 50000.0]), 20000.0)
+    assert int(res.n_failures[0]) == 1
+    assert not bool(res.truncated[0])
+    run = simulate_run(cfg, np.array([2000.0, 50000.0]), 20000.0)
+    assert run.n_failures == 1
+    np.testing.assert_allclose(res.energy_ref[0], run.energy_ref, rtol=1e-4)
+    # the makespan is balanced-execution time: the epoch extends the wall end
+    epoch = run.epochs[0]
+    np.testing.assert_allclose(run.end_time, 20000.0 + epoch.t_renewal
+                               + cfg.ckpt_duration, rtol=1e-12)
+    np.testing.assert_allclose(res.end_time[0], run.end_time, rtol=1e-12)
+    # a run that exhausts its sampled gaps with balanced time left is
+    # truncated (more failures would have been drawn)
+    res1 = sweep.renewal_compose(cfg, np.array([2000.0]), 20000.0)
+    assert bool(res1.truncated[0])
+    # zero failures: whole-run energy is the pure balanced closed form
+    res0 = sweep.renewal_compose(cfg, np.array([1e9]), 20000.0)
+    assert int(res0.n_failures[0]) == 0
+    ages = [s.ckpt_age for s in cfg.survivors] + [cfg.t_reexec]
+    pt = cfg.profile.power_table
+    expect = sum(
+        w * float(pt.p_comp[0]) + ck * float(pt.p_ckpt[0])
+        for w, ck in (planning.balanced_span(a, 20000.0, cfg.ckpt_interval,
+                                             cfg.ckpt_duration) for a in ages))
+    np.testing.assert_allclose(res0.energy_ref[0], expect, rtol=1e-12)
+    np.testing.assert_allclose(res0.saving[0], 0.0, atol=1e-9)
+
+
+def test_renewal_monte_carlo_deterministic_and_sane():
+    cfg = paper_scenarios()["scenario2_long_reexec"]
+    kw = dict(n_runs=64, makespan_s=10 * 24 * 3600.0,
+              mtbf_s=3 * 24 * 3600.0, max_failures=32)
+    a = sweep.renewal_monte_carlo(cfg, jax.random.PRNGKey(3), **kw)
+    b = sweep.renewal_monte_carlo(cfg, jax.random.PRNGKey(3), **kw)
+    assert a == b
+    c = sweep.renewal_monte_carlo(cfg, jax.random.PRNGKey(4), **kw)
+    assert c.mean_saving_j != a.mean_saving_j
+    assert a.mean_saving_j > 0
+    assert a.p5_saving_j <= a.mean_saving_j <= a.p95_saving_j
+    assert a.mean_energy_int_j <= a.mean_energy_ref_j
+    np.testing.assert_allclose(sum(a.failure_count_hist.values()), 1.0)
+    np.testing.assert_allclose(sum(a.per_node_failures), a.mean_failures, rtol=1e-12)
+    # 4 nodes, per-node MTBF 3 d, balanced horizon 10 d -> >> 2 failures/run
+    assert a.mean_failures > 2.0
+    assert a.truncated_rate <= 1.0
+    np.testing.assert_allclose(
+        a.annual_saving_j,
+        a.mean_saving_j * sweep.SECONDS_PER_YEAR / a.makespan_s, rtol=1e-12)
+
+
+def test_renewal_monte_carlo_failure_counts_follow_mtbf():
+    """Expected failure count tracks makespan / (mtbf / n_nodes) to within
+    Monte-Carlo noise (failures arrive only during balanced execution)."""
+    cfg = paper_scenarios()["scenario4_short_active_waits"]
+    mtbf, makespan = 5 * 24 * 3600.0, 20 * 24 * 3600.0
+    mc = sweep.renewal_monte_carlo(
+        cfg, jax.random.PRNGKey(0), n_runs=128, makespan_s=makespan,
+        mtbf_s=mtbf, max_failures=64)
+    expect = makespan / (mtbf / 4.0)
+    assert 0.8 * expect < mc.mean_failures < 1.2 * expect
+    assert mc.truncated_rate == 0.0

@@ -112,6 +112,38 @@ def test_monte_carlo_grid_shape():
     assert np.all(np.asarray(d.saving) >= -1e-2)
 
 
+def test_mu1_band_and_defaults():
+    """The Table-4 decisions pin mu1 to the open band (110/30, 230/30) ~=
+    (3.67, 7.67); both evaluation entry points must default inside it (the
+    docstring's derivation, regression-pinned here against the defaults)."""
+    import inspect
+
+    lo, hi = 110.0 / 30.0, 230.0 / 30.0
+    for fn in (strategies.evaluate_strategies, strategies.evaluate_strategies_profile):
+        default = inspect.signature(fn).parameters["mu1"].default
+        assert default == 6.0, fn.__name__
+        assert lo < default < hi, fn.__name__
+
+    profile = paper_machine_profile()
+
+    def sleeps(t_comp, t_failed, n_ckpt, mu1):
+        d = strategies.evaluate_strategies_profile(
+            profile, t_comp, t_failed, n_ckpt, 120.0, int(em.WaitMode.ACTIVE),
+            mu1=mu1,
+        )
+        return int(d.wait_action) == em.WaitAction.SLEEP
+
+    # scenario 1 node 1 (110 s wait, must NOT sleep) fixes the lower edge;
+    # nodes 2-3 (230 s wait, MUST sleep) fix the upper edge.  Decisions hold
+    # for every mu1 inside the band — including the defaults and all four
+    # integers — and flip just outside it.
+    for mu1 in (lo + 1e-3, 4.0, 5.0, 6.0, 7.0, hi - 1e-3):
+        assert not sleeps(972.0, 1202.0, 1.0, mu1), mu1   # wait = 110 s
+        assert sleeps(103.8, 333.8, 0.0, mu1), mu1        # wait = 230 s
+    assert sleeps(972.0, 1202.0, 1.0, lo - 0.1)           # gate too loose
+    assert not sleeps(103.8, 333.8, 0.0, hi + 0.1)        # gate too tight
+
+
 def test_known_decisions_table4():
     """Spot-check the four decision regimes of Table 4 (one per scenario
     family); the full rows are covered in test_scenarios.py."""
