@@ -1,0 +1,105 @@
+"""Perf-regression gate for the committed failure-sweep benchmark record.
+
+Compares a fresh ``BENCH_failure_sweep.json`` against the committed
+baseline (``benchmarks/artifacts/BENCH_failure_sweep.json``) and fails when
+any throughput row (``decisions_per_s > 0`` in both files, matched by name)
+regresses by more than ``THRESHOLD`` (30 %).
+
+Raw decisions/s are only comparable on like hardware, so the absolute rows
+are gated only when the ``meta/machine`` fingerprints match; the relative
+``renewal_speedup`` row (device engine vs host oracle, timed on the same
+machine) is checked on every run, and a baseline row that disappears from
+the fresh record is itself a failure.  The fresh record is uploaded as a
+CI artifact regardless, so the per-machine trajectory accumulates.
+
+Usage:  python -m benchmarks.check_regression FRESH [BASELINE]
+
+Exit codes: 0 ok / skipped (no baseline), 1 regression.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+import sys
+
+THRESHOLD = 0.30
+DEFAULT_BASELINE = pathlib.Path(__file__).parent / "artifacts" / "BENCH_failure_sweep.json"
+
+
+def _rows(path: pathlib.Path) -> dict:
+    return {r["name"]: r for r in json.loads(path.read_text())}
+
+
+def _machine(rows: dict) -> str:
+    return rows.get("meta/machine", {}).get("derived", "unknown")
+
+
+def _speedup(rows: dict) -> float | None:
+    row = rows.get("failure_sweep/renewal_speedup")
+    if row is None:
+        return None
+    m = re.match(r"([0-9.]+)x", row["derived"])
+    return float(m.group(1)) if m else None
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if not argv:
+        print("usage: python -m benchmarks.check_regression FRESH [BASELINE]")
+        return 1
+    fresh_path = pathlib.Path(argv[0])
+    base_path = pathlib.Path(argv[1]) if len(argv) > 1 else DEFAULT_BASELINE
+    if not base_path.exists():
+        print(f"no committed baseline at {base_path}; skipping perf gate")
+        return 0
+    fresh, base = _rows(fresh_path), _rows(base_path)
+
+    failures = []
+
+    # machine-independent check, active on every run: the device-vs-host
+    # renewal speedup is a ratio of two timings on the same machine
+    s_fresh, s_base = _speedup(fresh), _speedup(base)
+    if s_base is not None:
+        if s_fresh is None:
+            failures.append("renewal_speedup row missing from fresh record")
+        else:
+            print(f"renewal speedup: fresh {s_fresh:.1f}x vs baseline {s_base:.1f}x")
+            if s_fresh < (1.0 - THRESHOLD) * s_base:
+                failures.append(
+                    f"renewal_speedup: {s_fresh:.1f}x < "
+                    f"{(1.0 - THRESHOLD) * s_base:.1f}x (70% of baseline)")
+
+    m_fresh, m_base = _machine(fresh), _machine(base)
+    if m_fresh != m_base:
+        print(f"machine mismatch (fresh {m_fresh!r} vs baseline {m_base!r}); "
+              "absolute decisions/s are not comparable across hardware — "
+              "only the speedup ratio was checked (the fresh record is "
+              "still archived as a CI artifact)")
+    else:
+        for name, row in base.items():
+            dps = row.get("decisions_per_s", 0.0)
+            if dps <= 0.0:
+                continue
+            if name not in fresh:
+                failures.append(f"{name}: throughput row missing from fresh record")
+                continue
+            got = fresh[name].get("decisions_per_s", 0.0)
+            ok = got >= (1.0 - THRESHOLD) * dps
+            print(f"{name}: fresh {got:.3e} vs baseline {dps:.3e} dec/s "
+                  f"{'ok' if ok else 'REGRESSION'}")
+            if not ok:
+                failures.append(
+                    f"{name}: {got:.3e} < {(1.0 - THRESHOLD) * dps:.3e} dec/s")
+
+    if failures:
+        print("\nperf regression (> {:.0%}):".format(THRESHOLD))
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print("perf gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,17 +7,33 @@ dispatch of the sweep engine (``repro.core.sweep``) — and reports per-scenario
 distributional statistics plus Monte-Carlo expected annual savings under an
 exponential MTBF.
 
-Renewal mode (multi-failure whole runs) is benchmarked alongside: per-run
-failure *sequences* composed through ``sweep.renewal_compose`` (host
-float64 geometry recursion + one jitted Algorithm-1 dispatch over every
-(run, epoch, survivor) point), reported as end-to-end decisions/s next to
-the single-failure grid's, plus per-scenario whole-run expectations.
+Renewal mode (multi-failure whole runs) is benchmarked for *both* engines:
 
-Run:  PYTHONPATH=src python -m benchmarks.failure_sweep [--json BENCH_failure_sweep.json]
+  * the PR 2 **host oracle** — ``sweep.renewal_compose``: a Python loop over
+    failure epochs (float64 numpy geometry) plus one jitted Algorithm-1
+    dispatch, measured with a host/device wall-clock breakdown;
+  * the **device engine** — ``sweep.renewal_monte_carlo_scenarios``: gap
+    sampling, the scan-over-epochs composition, Algorithm 1, and the
+    whole-run reduction for all six Table-4 scenarios fused into one jitted
+    program.
+
+Both are reported as renewal decisions/s at the same default shape
+(256 runs x 32 epochs x 3 survivors); the speedup row is the device engine
+against the host oracle on the same end-to-end Monte-Carlo task (identical
+key, identical summaries out).  Timings are medians over interleaved
+repetitions so both paths see the same machine phases.
+
+Run:  PYTHONPATH=src python -m benchmarks.failure_sweep [--json BENCH_failure_sweep.json] [--full]
+
+``--full`` adds the large-shape device dispatch (4096 runs x 64 epochs x 6
+scenarios in one program) to demonstrate scaling headroom; it is excluded
+from the default run to keep CI fast.
 """
 from __future__ import annotations
 
 import json
+import platform
+import statistics
 import sys
 import time
 
@@ -37,6 +53,19 @@ RENEWAL_RUNS = 256
 RENEWAL_MAX_FAILURES = 32
 RENEWAL_MAKESPAN_D = 30.0
 RENEWAL_MTBF_D = 7.0        # per-node MTBF
+RENEWAL_REPS = 7            # interleaved timing repetitions (median)
+
+# --full scaling shape: one device dispatch
+FULL_RUNS = 4096
+FULL_MAX_FAILURES = 64
+
+
+def machine_fingerprint() -> str:
+    """Coarse machine id recorded next to the numbers: decisions/s are only
+    comparable on like hardware (benchmarks/check_regression.py gates on
+    this)."""
+    import os
+    return f"{platform.system()}-{platform.machine()}-cpu{os.cpu_count()}"
 
 
 def grid_offsets(n_offsets: int = N_OFFSETS) -> np.ndarray:
@@ -65,44 +94,140 @@ def renewal_stats(
     makespan_d: float = RENEWAL_MAKESPAN_D,
     mtbf_d: float = RENEWAL_MTBF_D,
 ) -> dict:
-    """name -> RenewalMonteCarloSummary for the six Table-4 scenarios."""
-    return {
-        name: sweep.renewal_monte_carlo(
-            cfg, jax.random.PRNGKey(0), n_runs=n_runs,
-            makespan_s=makespan_d * 24 * 3600.0,
-            mtbf_s=mtbf_d * 24 * 3600.0, max_failures=max_failures)
-        for name, cfg in paper_scenarios().items()
-    }
+    """name -> RenewalMonteCarloSummary for the six Table-4 scenarios —
+    one fused device dispatch (same program the throughput rows time)."""
+    return sweep.renewal_monte_carlo_scenarios(
+        list(paper_scenarios().values()), jax.random.PRNGKey(0),
+        n_runs=n_runs, makespan_s=makespan_d * 24 * 3600.0,
+        mtbf_s=mtbf_d * 24 * 3600.0, max_failures=max_failures)
+
+
+def _median_time(fn, reps: int) -> float:
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return statistics.median(ts)
 
 
 def renewal_throughput(
-    n_runs: int = RENEWAL_RUNS, max_failures: int = RENEWAL_MAX_FAILURES
+    n_runs: int = RENEWAL_RUNS,
+    max_failures: int = RENEWAL_MAX_FAILURES,
+    reps: int = RENEWAL_REPS,
 ) -> dict:
-    """End-to-end renewal composition throughput (decisions/s): host
-    geometry recursion + the jitted Algorithm-1 dispatch, warm."""
-    cfg = paper_scenarios()["scenario2_long_reexec"]
-    gaps, failed = sweep.renewal_failure_gaps(
-        jax.random.PRNGKey(1), n_runs, len(cfg.survivors) + 1, max_failures,
-        RENEWAL_MTBF_D * 24 * 3600.0)
+    """Renewal decisions/s for the host oracle and the device engine.
+
+    The two engines run the *same* end-to-end Monte-Carlo task (same PRNG
+    key, same ``RenewalMonteCarloSummary`` out): the host path samples gaps,
+    runs the PR 2 geometry loop + one jitted Algorithm-1 dispatch per
+    scenario, and reduces on the host; the device path does all of it for
+    all six scenarios in one fused jitted program.  Interleaved median
+    timings; the host path additionally gets a host-loop vs jitted-dispatch
+    wall-clock breakdown (the loop is the part the device engine deletes).
+    """
+    cfgs = paper_scenarios()
+    cfg = cfgs["scenario2_long_reexec"]
+    cfg_list = list(cfgs.values())
+    key = jax.random.PRNGKey(1)
     makespan = RENEWAL_MAKESPAN_D * 24 * 3600.0
-    res = sweep.renewal_compose(cfg, gaps, makespan, failed_node=failed)
-    jax.block_until_ready(res.decision.saving)
-    t0 = time.perf_counter()
-    res = sweep.renewal_compose(cfg, gaps, makespan, failed_node=failed)
-    jax.block_until_ready(res.decision.saving)
-    dt = time.perf_counter() - t0
-    n_decisions = int(np.prod(res.decision.saving.shape))
+    mtbf = RENEWAL_MTBF_D * 24 * 3600.0
+    kw = dict(n_runs=n_runs, makespan_s=makespan, mtbf_s=mtbf,
+              max_failures=max_failures)
+
+    gaps, failed = sweep.renewal_failure_gaps(
+        key, n_runs, len(cfg.survivors) + 1, max_failures, mtbf)
+
+    def host_compose():
+        res = sweep.renewal_compose(cfg, gaps, makespan, failed_node=failed)
+        jax.block_until_ready(res.decision.saving)
+        return res
+
+    def host_mc():
+        return sweep.renewal_monte_carlo(cfg, key, engine="host", **kw)
+
+    def device_mc():
+        return sweep.renewal_monte_carlo_scenarios(cfg_list, key, **kw)
+
+    # warm both engines (compile + caches), then interleave reps so both
+    # paths experience the same machine phases
+    res = host_compose()
+    host_mc()
+    device_mc()
+    t_compose, t_host_mc, t_dev_mc = [], [], []
+    for _ in range(reps):
+        t0 = time.perf_counter(); host_compose(); t_compose.append(time.perf_counter() - t0)
+        t0 = time.perf_counter(); host_mc(); t_host_mc.append(time.perf_counter() - t0)
+        t0 = time.perf_counter(); device_mc(); t_dev_mc.append(time.perf_counter() - t0)
+    t_compose = statistics.median(t_compose)
+    t_host_mc = statistics.median(t_host_mc)
+    t_dev_mc = statistics.median(t_dev_mc)
+
+    # host breakdown: the jitted Algorithm-1 dispatch alone, on the arrays
+    # the composition produced — the remainder is the Python/numpy loop
+    from repro.core import strategies
+    inp = sweep.sweep_inputs(cfg)
+    import jax.numpy as jnp
+    args = (jnp.asarray(res.exec_rem, jnp.float32),
+            jnp.asarray(res.t_failed, jnp.float32),
+            jnp.asarray(res.n_ckpt, jnp.float32))
+
+    def dispatch():
+        d = strategies.evaluate_strategies(
+            args[0], args[1], args[2], inp.dur, inp.ladder, inp.sleep,
+            inp.wait_mode, inp.p_idle_wait, mu1=inp.mu1, mu2=inp.mu2,
+            per_level_n_ckpt=True)
+        jax.block_until_ready(d.saving)
+
+    dispatch()
+    t_dispatch = _median_time(dispatch, reps)
+
+    n_host = n_runs * max_failures * len(cfg.survivors)
+    n_dev = len(cfg_list) * n_host
+    host_dps = n_host / t_host_mc
+    dev_dps = n_dev / t_dev_mc
     return {
-        "seconds": dt,
-        "decisions": n_decisions,
-        "decisions_per_s": n_decisions / dt,
-        "mean_failures": float(res.n_failures.mean()),
+        "host_compose_s": t_compose,
+        "host_dispatch_s": t_dispatch,
+        "host_loop_s": max(t_compose - t_dispatch, 0.0),
+        "host_mc_s": t_host_mc,
+        "device_mc_s": t_dev_mc,
+        "host_decisions": n_host,
+        "device_decisions": n_dev,
+        "host_compose_dps": n_host / t_compose,
+        "host_dps": host_dps,
+        "device_dps": dev_dps,
+        "speedup": dev_dps / host_dps,
+        "speedup_compose": dev_dps / (n_host / t_compose),
     }
 
 
-def run() -> list:
+def device_scaling(n_runs: int = FULL_RUNS, max_failures: int = FULL_MAX_FAILURES,
+                   reps: int = 3) -> dict:
+    """One fused dispatch at the large shape (--full): 4096 runs x 64 epochs
+    x 6 scenarios — the scaling headroom the host loop cannot reach."""
+    cfg_list = list(paper_scenarios().values())
+    key = jax.random.PRNGKey(1)
+    kw = dict(n_runs=n_runs, max_failures=max_failures,
+              makespan_s=RENEWAL_MAKESPAN_D * 24 * 3600.0,
+              mtbf_s=RENEWAL_MTBF_D * 24 * 3600.0)
+    fn = lambda: sweep.renewal_monte_carlo_scenarios(cfg_list, key, **kw)
+    fn()
+    dt = _median_time(fn, reps)
+    n = len(cfg_list) * n_runs * max_failures * len(cfg_list[0].survivors)
+    return {"seconds": dt, "decisions": n, "decisions_per_s": n / dt}
+
+
+def run(full: bool = False) -> list:
     cfg_list = list(paper_scenarios().values())
     offsets = grid_offsets()
+
+    rows = [{
+        "name": "meta/machine",
+        "us_per_call": 0.0,
+        "decisions_per_s": 0.0,
+        "derived": machine_fingerprint(),
+    }]
 
     # one jitted dispatch for the full (scenario x failure-time x node) grid
     res = sweep.sweep_scenarios(cfg_list, offsets)
@@ -113,12 +238,12 @@ def run() -> list:
     dt = time.perf_counter() - t0
 
     n_decisions = int(np.prod(res.decision.saving.shape))
-    rows = [{
+    rows.append({
         "name": f"failure_sweep/grid_{len(cfg_list)}x{N_OFFSETS}x3",
         "us_per_call": dt * 1e6,
         "decisions_per_s": n_decisions / dt,
         "derived": f"{n_decisions / dt:.3e}dec/s",
-    }]
+    })
 
     stats = scenario_stats()
     for name, (summ, _) in stats.items():
@@ -146,17 +271,42 @@ def run() -> list:
             ),
         })
 
-    # renewal mode: whole-run multi-failure composition
+    # renewal mode: whole-run multi-failure composition, both engines
+    shape = f"{RENEWAL_RUNS}x{RENEWAL_MAX_FAILURES}x3"
     thr = renewal_throughput()
     rows.append({
-        "name": f"failure_sweep/renewal_{RENEWAL_RUNS}x{RENEWAL_MAX_FAILURES}x3",
-        "us_per_call": thr["seconds"] * 1e6,
-        "decisions_per_s": thr["decisions_per_s"],
+        "name": f"failure_sweep/renewal_host_{shape}",
+        "us_per_call": thr["host_mc_s"] * 1e6,
+        "decisions_per_s": thr["host_dps"],
         "derived": (
-            f"{thr['decisions_per_s']:.3e}dec/s"
-            f"_meanfail={thr['mean_failures']:.1f}"
+            f"{thr['host_dps']:.3e}dec/s"
+            f"_loop={thr['host_loop_s'] * 1e3:.1f}ms"
+            f"_dispatch={thr['host_dispatch_s'] * 1e3:.1f}ms"
         ),
     })
+    rows.append({
+        "name": f"failure_sweep/renewal_device_6x{shape}",
+        "us_per_call": thr["device_mc_s"] * 1e6,
+        "decisions_per_s": thr["device_dps"],
+        "derived": f"{thr['device_dps']:.3e}dec/s_one_dispatch",
+    })
+    rows.append({
+        "name": "failure_sweep/renewal_speedup",
+        "us_per_call": 0.0,
+        "decisions_per_s": 0.0,
+        "derived": (
+            f"{thr['speedup']:.1f}x_device_vs_host"
+            f"_{thr['speedup_compose']:.1f}x_vs_compose_only"
+        ),
+    })
+    if full:
+        sc = device_scaling()
+        rows.append({
+            "name": f"failure_sweep/renewal_device_6x{FULL_RUNS}x{FULL_MAX_FAILURES}x3",
+            "us_per_call": sc["seconds"] * 1e6,
+            "decisions_per_s": sc["decisions_per_s"],
+            "derived": f"{sc['decisions_per_s']:.3e}dec/s_one_dispatch",
+        })
     for name, mc in renewal_stats().items():
         rows.append({
             "name": f"failure_sweep/renewal_{name}",
@@ -178,9 +328,9 @@ def main(argv=None):
     if "--json" in argv:
         i = argv.index("--json")
         if i + 1 >= len(argv):
-            sys.exit("usage: python -m benchmarks.failure_sweep [--json PATH]")
+            sys.exit("usage: python -m benchmarks.failure_sweep [--json PATH] [--full]")
         json_path = argv[i + 1]
-    rows = run()
+    rows = run(full="--full" in argv)
     for r in rows:
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
     if json_path is not None:

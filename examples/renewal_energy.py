@@ -5,10 +5,14 @@ the intervention window.  Real jobs run for days against per-node MTBFs of
 days-to-weeks, so several failures land per run.  This example drives the
 renewal layer of ``repro.core.sweep`` end to end:
 
-  1. one explicit failure history, composed analytically and cross-checked
-     against the multi-failure event simulator (``simulator.simulate_run``);
-  2. Monte-Carlo whole-run expectations: failure-count distribution,
-     whole-run energy with and without Algorithm 1, expected saving;
+  1. one explicit failure history, composed on-device
+     (``renewal_compose_device``) and cross-checked against both the
+     float64 host oracle (``renewal_compose``) and the multi-failure event
+     simulator (``simulator.simulate_run``);
+  2. the batched all-scenarios API: whole-run Monte-Carlo expectations for
+     *all six* Table-4 scenarios from ONE fused device dispatch — gap
+     sampling, the scan over failure epochs, Algorithm 1, and the
+     whole-run reduction in a single jitted program;
   3. the MTBF axis: how whole-run savings scale as nodes get flakier.
 
 Semantics (docs/sweep.md): failures arrive per node as independent Poisson
@@ -22,62 +26,73 @@ Run:  PYTHONPATH=src python examples/renewal_energy.py
 import jax
 import numpy as np
 
-from repro.core import renewal_compose, renewal_monte_carlo
+from repro.core import (
+    renewal_compose,
+    renewal_compose_device,
+    renewal_monte_carlo_scenarios,
+)
 from repro.core.scenarios import paper_scenarios
 from repro.core.simulator import simulate_run
 
-cfg = paper_scenarios()["scenario2_long_reexec"]
+cfgs = paper_scenarios()
+cfg = cfgs["scenario2_long_reexec"]
 DAY = 24 * 3600.0
 
 print("=" * 72)
-print("1. One failure history: three failures over ~17 h, analytic renewal")
-print("   composition vs the multi-failure event simulator")
+print("1. One failure history: three failures over ~17 h — device scan vs")
+print("   float64 host oracle vs the multi-failure event simulator")
 print("=" * 72)
 gaps = np.array([5000.0, 9000.0, 4000.0])           # balanced s between epochs
 makespan = 60000.0
 run = simulate_run(cfg, gaps, makespan)             # event oracle
-res = renewal_compose(cfg, gaps, makespan)          # closed form + jitted Alg.1
+host = renewal_compose(cfg, gaps, makespan)         # float64 host oracle
+dev = renewal_compose_device(cfg, gaps, makespan)   # fused jitted scan
 print(f"   failures handled: {run.n_failures}  (wall end {run.end_time / 3600:.1f} h)")
-print(f"   {'':>12} {'event sim':>14} {'analytic':>14}")
-print(f"   {'E no-int':>12} {run.energy_ref / 3.6e6:>12.3f} kWh "
-      f"{float(res.energy_ref[0]) / 3.6e6:>12.3f} kWh")
-print(f"   {'E with Alg1':>12} {run.energy_int / 3.6e6:>12.3f} kWh "
-      f"{float(res.energy_int[0]) / 3.6e6:>12.3f} kWh")
-print(f"   {'saving':>12} {run.saving / 1e3:>12.0f} kJ  "
-      f"{float(res.saving[0]) / 1e3:>12.0f} kJ")
-rel = abs(run.saving - float(res.saving[0])) / run.saving
-print(f"   agreement: {rel:.2e} relative")
+print(f"   {'':>12} {'event sim':>12} {'host oracle':>12} {'device':>12}")
+print(f"   {'E no-int':>12} {run.energy_ref / 3.6e6:>10.3f} kWh "
+      f"{float(host.energy_ref[0]) / 3.6e6:>10.3f} kWh "
+      f"{float(np.asarray(dev.energy_ref)[0, 0]) / 3.6e6:>10.3f} kWh")
+print(f"   {'E with Alg1':>12} {run.energy_int / 3.6e6:>10.3f} kWh "
+      f"{float(host.energy_int[0]) / 3.6e6:>10.3f} kWh "
+      f"{float(np.asarray(dev.energy_int)[0, 0]) / 3.6e6:>10.3f} kWh")
+rel_sim = abs(run.saving - float(np.asarray(dev.saving)[0, 0])) / run.saving
+rel_host = abs(float(host.saving[0]) - float(np.asarray(dev.saving)[0, 0])) \
+    / abs(float(host.saving[0]))
+print(f"   device agreement: {rel_sim:.2e} vs event sim, {rel_host:.2e} vs oracle")
 
 print()
 print("=" * 72)
-print("2. Monte-Carlo whole-run expectations: 30-day job, 7-day per-node")
-print("   MTBF (4 nodes), 256 sampled failure histories, fixed PRNG key")
+print("2. All six Table-4 scenarios, ONE device dispatch: 30-day job,")
+print("   7-day per-node MTBF (4 nodes), 256 sampled failure histories")
 print("=" * 72)
-mc = renewal_monte_carlo(cfg, jax.random.PRNGKey(0), n_runs=256,
-                         makespan_s=30 * DAY, mtbf_s=7 * DAY, max_failures=48)
-print(f"   E[failures/run] = {mc.mean_failures:.1f}   "
-      f"truncated runs: {mc.truncated_rate:.0%}")
-print("   failure-count distribution (n: fraction of runs):")
+mcs = renewal_monte_carlo_scenarios(
+    list(cfgs.values()), jax.random.PRNGKey(0), n_runs=256,
+    makespan_s=30 * DAY, mtbf_s=7 * DAY, max_failures=48)
+any_mc = next(iter(mcs.values()))
+print(f"   E[failures/run] = {any_mc.mean_failures:.1f}   "
+      f"truncated runs: {any_mc.truncated_rate:.0%}")
+print(f"   {'scenario':>34} | {'E[run save]':>11} | {'run %':>6} | sleep occ.")
+for name, mc in mcs.items():
+    print(f"   {name:>34} | {mc.mean_saving_j / 3.6e6:>8.2f}kWh | "
+          f"{mc.mean_saving_pct:>6.2f} | {mc.sleep_occupancy:.0%}")
+print(f"   failure-count distribution for {next(iter(mcs))} (the same")
+print("   sampled histories hit every scenario, though per-scenario snap")
+print("   geometry can shift counts near the makespan boundary):")
 bars = "".join(
     f"   {n:>3}: {'#' * int(round(frac * 40))} {frac:.2f}\n"
-    for n, frac in sorted(mc.failure_count_hist.items()))
+    for n, frac in sorted(any_mc.failure_count_hist.items()))
 print(bars, end="")
-print(f"   whole-run energy: {mc.mean_energy_ref_j / 3.6e6:.1f} kWh no-int, "
-      f"{mc.mean_energy_int_j / 3.6e6:.1f} kWh with Alg.1")
-print(f"   E[saving/run] = {mc.mean_saving_j / 3.6e6:.2f} kWh "
-      f"(p5 {mc.p5_saving_j / 3.6e6:.2f}, p95 {mc.p95_saving_j / 3.6e6:.2f}; "
-      f"{mc.mean_saving_pct:.2f}% of the run)")
-print(f"   sleep occupancy over epochs: {mc.sleep_occupancy:.0%}   "
-      f"annualized: {mc.annual_saving_j / 3.6e6:.1f} kWh/node-group")
 
 print()
 print("=" * 72)
 print("3. The MTBF axis: expected whole-run saving vs per-node MTBF")
+print("   (scenario 2; each row is one fused six-scenario dispatch)")
 print("=" * 72)
 print(f"   {'MTBF':>8} | {'E[failures]':>11} | {'E[saving]':>10} | run %")
 for mtbf_d in (3.0, 7.0, 14.0, 30.0):
-    m = renewal_monte_carlo(cfg, jax.random.PRNGKey(0), n_runs=128,
-                            makespan_s=30 * DAY, mtbf_s=mtbf_d * DAY,
-                            max_failures=96)
+    m = renewal_monte_carlo_scenarios(
+        list(cfgs.values()), jax.random.PRNGKey(0), n_runs=128,
+        makespan_s=30 * DAY, mtbf_s=mtbf_d * DAY,
+        max_failures=96)[cfg.name]
     print(f"   {mtbf_d:>6.0f} d | {m.mean_failures:>11.1f} | "
           f"{m.mean_saving_j / 3.6e6:>7.2f} kWh | {m.mean_saving_pct:.2f}")

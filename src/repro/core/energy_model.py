@@ -153,8 +153,20 @@ def take_level(a, level):
     Used wherever a per-node *current* ladder level (renewal runs: survivors
     may still hold a non-fa level from a prior failure epoch) selects one
     column of a per-level array.
+
+    A *concrete* scalar ``level`` (e.g. the default reference level 0 —
+    a trace-time constant, not a tracer) takes the static-slice fast path:
+    the slice fuses with the producers of ``a`` instead of forcing the
+    whole batched (..., F) intermediate into memory, which matters when
+    the device renewal engine evaluates every (scenario, run, epoch,
+    survivor) point in one program.
     """
     a = jnp.asarray(a)
+    if isinstance(level, int) or (
+        not isinstance(level, jax.core.Tracer)
+        and np.ndim(level) == 0
+    ):
+        return a[..., int(level)]
     level = jnp.asarray(level, jnp.int32)
     shape = jnp.broadcast_shapes(a.shape[:-1], level.shape)
     a = jnp.broadcast_to(a, shape + a.shape[-1:])

@@ -34,6 +34,7 @@ __all__ = [
     "CheckpointPlan",
     "advance_checkpoint_sawtooth",
     "balanced_span",
+    "timer_checkpoint_count",
     "checkpoint_plan",
     "expected_savings",
     "optimal_checkpoint_interval",
@@ -127,6 +128,20 @@ class CheckpointPlan:
     wait_at_block_fa: Any  # wait duration at block (fa timeline)
 
 
+def timer_checkpoint_count(exec_rem, age, beta, interval, eps: float = 1e-9):
+    """Closed-form count of timer checkpoints firing during a (stretched)
+    compute phase:  ``max(0, ceil((exec_rem*beta + age - interval)/interval
+    - eps))`` — the checkpoint-duration terms cancel (see
+    ``checkpoint_plan``).  ``beta`` may be the (F,) ladder (broadcast
+    against ``exec_rem[..., None]``) or one scalar level; the single
+    definition keeps ``checkpoint_plan`` and the device renewal engine's
+    per-level fold bit-identical.
+    """
+    xp = _ns(exec_rem, age, beta)
+    return xp.maximum(
+        0.0, xp.ceil((exec_rem * beta + age - interval) / interval - eps))
+
+
 def checkpoint_plan(
     exec_rem,
     age,
@@ -159,11 +174,8 @@ def checkpoint_plan(
     """
     xp = _ns(exec_rem, age, t_failed, beta)
     exec_rem, age, t_failed = (xp.asarray(a) for a in (exec_rem, age, t_failed))
-    n_timer = xp.maximum(
-        0.0,
-        xp.ceil((exec_rem[..., None] * beta + age[..., None] - interval) / interval
-                - eps),
-    )
+    n_timer = timer_checkpoint_count(
+        exec_rem[..., None], age[..., None], beta, interval, eps)
     n0 = n_timer[..., 0]
     wait_at_block_fa = t_failed - (exec_rem + n0 * dur)
     # age at block: if a timer fired during the compute phase the age restarts

@@ -40,6 +40,7 @@ __all__ = [
     "FailureState",
     "failure_state_at",
     "shift_failure",
+    "post_recovery_anchor",
     "post_recovery_config",
 ]
 
@@ -217,6 +218,26 @@ def shift_failure(cfg: ScenarioConfig, delta: float) -> ScenarioConfig:
     )
 
 
+def post_recovery_anchor(exec_rem, period):
+    """Array form of the renewal re-anchor: next rendezvous after ``P*``.
+
+    Given each survivor's remaining work ``exec_rem`` at the failure instant
+    (trailing axis over survivors) and the per-survivor rendezvous
+    ``period``, returns the re-anchored ``exec_to_rendezvous`` — the first
+    multiple of each period strictly past the epoch's shared progress point
+    ``P* = max exec_rem``, in ``(0, period]``.  This is the single closed
+    form behind ``post_recovery_config`` (scalar, host), the host renewal
+    recursion (``sweep.renewal_compose``), and the device renewal scan
+    (``sweep.renewal_compose_device``): numpy float64 and traced jnp inputs
+    both work (``planning._ns`` dispatch).
+    """
+    xp = planning._ns(exec_rem, period)
+    exec_rem, period = xp.asarray(exec_rem), xp.asarray(period)
+    p_star = xp.max(exec_rem, axis=-1, keepdims=True)
+    gap = xp.mod(p_star - exec_rem, period)
+    return xp.where(gap == 0.0, period, period - gap)
+
+
 def post_recovery_config(cfg: ScenarioConfig) -> ScenarioConfig:
     """Re-anchor a scenario at the renewal point after its failure is handled.
 
@@ -252,9 +273,7 @@ def post_recovery_config(cfg: ScenarioConfig) -> ScenarioConfig:
         )
     exec_rem = np.array([s.exec_to_rendezvous for s in cfg.survivors], np.float64)
     period = np.array([s.rendezvous_period for s in cfg.survivors], np.float64)
-    p_star = float(np.max(exec_rem))
-    gap = np.mod(p_star - exec_rem, period)
-    exec_next = np.where(gap == 0.0, period, period - gap)
+    exec_next = post_recovery_anchor(exec_rem, period)
     survivors = tuple(
         dataclasses.replace(
             sv,

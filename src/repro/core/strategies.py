@@ -42,7 +42,13 @@ import numpy as np
 from repro.core import energy_model as em
 from repro.core.characterization import MachineProfile
 
-__all__ = ["Decision", "evaluate_strategies", "evaluate_strategies_profile"]
+__all__ = [
+    "Decision",
+    "evaluate_strategies",
+    "evaluate_strategies_fold",
+    "evaluate_strategies_impl",
+    "evaluate_strategies_profile",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,8 +79,7 @@ jax.tree_util.register_dataclass(
 )
 
 
-@functools.partial(jax.jit, static_argnames=("per_level_n_ckpt",))
-def evaluate_strategies(
+def evaluate_strategies_impl(
     t_comp_fa,
     t_failed,
     n_ckpt,
@@ -89,6 +94,14 @@ def evaluate_strategies(
     ref_level=0,
 ) -> Decision:
     """Run Algorithm 1 for a batch of surviving nodes.
+
+    This is the unjitted implementation: call it from *inside* an already
+    traced program (the device renewal engine does) so XLA inlines it —
+    fusing it with the surrounding computation and dead-code-eliminating
+    any ``Decision`` fields the caller drops.  A nested ``jit`` would
+    instead pin all eleven fields as materialized call outputs.
+    ``evaluate_strategies`` below is the jitted entry point for direct
+    callers.
 
     All node inputs broadcast; pass arrays of shape (N,) — or (T, N) to sweep
     failure times, etc.  ``wait_mode`` is per-node (em.WaitMode value).
@@ -109,7 +122,9 @@ def evaluate_strategies(
         jnp.asarray(t_failed, jnp.float32),
         jnp.asarray(wait_mode, jnp.int32),
     )
-    ref_level = jnp.broadcast_to(jnp.asarray(ref_level, jnp.int32), t_comp_fa.shape)
+    # ref_level stays unbroadcast: a concrete scalar (the paper's fa
+    # baseline, the device renewal engine) hits take_level's static-slice
+    # fast path; arrays broadcast where consumed.
     n_ckpt = jnp.asarray(n_ckpt, jnp.float32)
     if not per_level_n_ckpt:
         n_ckpt = jnp.broadcast_to(n_ckpt, t_comp_fa.shape)
@@ -123,17 +138,25 @@ def evaluate_strategies(
     # broadcasts both operands before gathering.
     take = lambda a: em.take_level(a, level)
 
-    eni = em.reference_energy(
-        t_comp_fa, t_failed, n_ckpt, t_ckpt, ladder, wait_mode, p_idle_wait,
-        per_level_n_ckpt=per_level_n_ckpt, ref_level=ref_level,
-    )
+    # reference ENI (eq. 2, case B at ref_level): reuse the per-level comp
+    # time/energy already computed for EI instead of re-deriving the whole
+    # ladder — the gathered values are bit-identical to reference_energy's
+    # (same ops, same float32 rounding), it's only the redundant (..., F)
+    # recomputation that goes away.  Matters inside the device renewal
+    # engine, where this dispatch runs for every (scenario, run, epoch).
+    ct_ref = em.take_level(ei["comp_t"], ref_level)
+    ce_ref = em.take_level(ei["e_comp"], ref_level)
+    eni = ce_ref + em.awake_wait_energy(
+        t_failed - ct_ref, wait_mode, ladder, p_idle_wait, spin_level=ref_level)
     e_sel = take(ei["total"])
     feasible_any = jnp.any(ei["feasible"], axis=-1)
     # If nothing is feasible (can't happen when fa is feasible by
     # construction, but guard numerically) fall back to the reference:
     # keep the node's current level and take no action.
     e_sel = jnp.where(feasible_any, e_sel, eni)
-    level = jnp.where(feasible_any, level, jnp.broadcast_to(ref_level, level.shape))
+    ref_level_b = jnp.broadcast_to(
+        jnp.asarray(ref_level, jnp.int32), level.shape)
+    level = jnp.where(feasible_any, level, ref_level_b)
 
     sleeps = take(ei["sleeps"]) & feasible_any
     active = wait_mode == em.WaitMode.ACTIVE
@@ -154,6 +177,112 @@ def evaluate_strategies(
         wait_action=wait_action,
         comp_time=take(ei["comp_t"]),
         wait_time=take(ei["wait_t"]),
+        energy_intervened=e_sel,
+        energy_reference=eni,
+        saving=saving,
+        saving_pct=100.0 * saving / jnp.maximum(eni, 1e-9),
+        feasible_any=feasible_any,
+    )
+
+
+evaluate_strategies = functools.partial(jax.jit, static_argnames=(
+    "per_level_n_ckpt",))(evaluate_strategies_impl)
+
+
+def evaluate_strategies_fold(
+    t_comp_fa,
+    t_failed,
+    n_ckpt_cols,
+    t_ckpt,
+    ladder: em.LadderArrays,
+    sleep: em.SleepArrays,
+    wait_mode,
+    p_idle_wait,
+    mu1=6.0,
+    mu2=1.0,
+    ref_level: int = 0,
+) -> Decision:
+    """Algorithm 1 as an F-unrolled running-argmin fold over ladder levels.
+
+    Equivalent to ``evaluate_strategies`` — every energy term is written in
+    the same operation order (so the two can differ only by XLA's
+    per-program FMA-contraction choices, ~1 ulp), the running ``<`` keeps
+    the first minimum exactly like ``argmin``, and
+    tests/test_renewal_device.py pins all ``Decision`` fields of the two
+    implementations against each other — but it never builds a ``(..., F)``
+    array: each level's column is a node-batch-shaped intermediate that XLA
+    fuses and then discards.  At
+    the device renewal engine's batch sizes the vectorized form's per-level
+    intermediates (~10 arrays x F x batch) dominate memory traffic, which
+    this shape avoids.  Restrictions vs the vectorized form: per-level
+    checkpoint counts are passed as ``n_ckpt_cols`` (a static sequence of F
+    node-batch arrays), ``ref_level`` must be a concrete int, and there is
+    no mu-band axis (``mu1``/``mu2`` broadcast against the node batch).
+    """
+    t_comp_fa, t_failed, wait_mode = jnp.broadcast_arrays(
+        jnp.asarray(t_comp_fa, jnp.float32),
+        jnp.asarray(t_failed, jnp.float32),
+        jnp.asarray(wait_mode, jnp.int32),
+    )
+    t_ckpt = jnp.asarray(t_ckpt, jnp.float32)
+    ref_level = int(ref_level)
+    active = wait_mode == em.WaitMode.ACTIVE
+    min_level = ladder.num_levels - 1
+    p_awake = jnp.where(active, ladder.p_comp[min_level], p_idle_wait)
+    feas_rhs = t_failed * (1.0 + 1e-6) + 1e-3
+    trans_t, trans_e = sleep.transition_time, sleep.transition_energy
+    gate_t = mu1 * trans_t
+
+    best = None
+    for f in range(ladder.num_levels):
+        n_f = jnp.asarray(n_ckpt_cols[f], jnp.float32)
+        # same op order as comp_time / comp_energy / wait branches
+        ct = t_comp_fa * ladder.beta[f] + n_f * t_ckpt * ladder.gamma[f]
+        feasible = ct <= feas_rhs
+        wt = t_failed - ct
+        e_comp = t_comp_fa * ladder.beta[f] * ladder.p_comp[f] \
+            + n_f * t_ckpt * ladder.gamma[f] * ladder.p_ckpt[f]
+        e_awake = jnp.maximum(wt, 0.0) * p_awake
+        e_sleep = trans_e + jnp.maximum(wt - trans_t, 0.0) * sleep.p_sleep
+        sleeps = (wt > gate_t) & (e_sleep < mu2 * e_awake)
+        total = jnp.where(
+            feasible, e_comp + jnp.where(sleeps, e_sleep, e_awake), jnp.inf)
+        if f == ref_level:
+            ct_ref, e_comp_ref, sleeps_ref = ct, e_comp, sleeps
+        if best is None:
+            best = dict(total=total, level=jnp.zeros_like(wait_mode),
+                        ct=ct, sleeps=sleeps, feasible_any=feasible)
+        else:
+            better = total < best["total"]  # strict: first minimum, as argmin
+            best = dict(
+                total=jnp.where(better, total, best["total"]),
+                level=jnp.where(better, f, best["level"]),
+                ct=jnp.where(better, ct, best["ct"]),
+                sleeps=jnp.where(better, sleeps, best["sleeps"]),
+                feasible_any=best["feasible_any"] | feasible,
+            )
+
+    eni = e_comp_ref + jnp.maximum(t_failed - ct_ref, 0.0) * jnp.where(
+        active, ladder.p_comp[ref_level], p_idle_wait)
+    feasible_any = best["feasible_any"]
+    e_sel = jnp.where(feasible_any, best["total"], eni)
+    level = jnp.where(feasible_any, best["level"], ref_level)
+    comp_time = jnp.where(feasible_any, best["ct"], ct_ref)
+    sleeps = jnp.where(feasible_any, best["sleeps"], sleeps_ref) & feasible_any
+    wait_action = jnp.where(
+        sleeps,
+        em.WaitAction.SLEEP,
+        jnp.where(active, em.WaitAction.MIN_FREQ, em.WaitAction.NONE),
+    ).astype(jnp.int32)
+    wait_action = jnp.where(feasible_any, wait_action, em.WaitAction.NONE)
+    saving = eni - e_sel
+    return Decision(
+        level=level.astype(jnp.int32),
+        freq_ghz=ladder.freq_ghz[level],
+        comp_changed=level != ref_level,
+        wait_action=wait_action,
+        comp_time=comp_time,
+        wait_time=t_failed - comp_time,
         energy_intervened=e_sel,
         energy_reference=eni,
         saving=saving,

@@ -40,6 +40,24 @@ Algorithm-1 dispatch across every (run, epoch, survivor) point.
 Cross-validated pointwise against ``simulator.simulate_run`` in
 tests/test_renewal.py; semantics in docs/sweep.md.
 
+The renewal composition comes in two implementations:
+
+  * ``renewal_compose`` — the float64 *host oracle*: a Python loop over
+    failure epochs (numpy geometry) plus one jitted Algorithm-1 dispatch.
+    Slow but transparent; the cross-validation anchor.
+  * ``renewal_compose_device`` / ``renewal_monte_carlo_device`` — the
+    *device engine*: the same recursion as a ``jax.lax.scan`` over epochs
+    whose carry is the re-anchored state, ``vmap``ped over runs and over
+    stacked Table-4 scenarios, fused with the Algorithm-1 dispatch, the
+    balanced-span energy, the trailing-span accounting, and (in the
+    ``_device`` Monte-Carlo entry) the on-device gap sampling into **one
+    jitted program** — no per-epoch host round-trips, no per-scenario
+    re-dispatch.  Geometry is traced under ``jax.experimental.enable_x64``
+    so wall-clock times stay float64-exact against the oracle while the
+    Algorithm-1 energy math stays float32, exactly as on the host path.
+    ``tests/test_renewal_device.py`` pins the two paths together at
+    <= 1e-4 relative (observed ~1e-9) on whole-run energies.
+
 Semantics notes (also in docs/sweep.md):
   * failure instants landing inside a node's checkpoint snap forward to the
     checkpoint's end (per node) — see ``advance_checkpoint_sawtooth``;
@@ -58,10 +76,12 @@ from typing import Optional, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import enable_x64
 
 from repro.core import energy_model as em
 from repro.core import planning
 from repro.core import strategies
+from repro.core.scenarios import post_recovery_anchor
 from repro.core.simulator import ScenarioConfig
 
 __all__ = [
@@ -70,6 +90,8 @@ __all__ = [
     "SweepSummary",
     "MonteCarloSummary",
     "RenewalResult",
+    "RenewalDeviceResult",
+    "RenewalDeviceStats",
     "RenewalMonteCarloSummary",
     "sweep_inputs",
     "sweep_failure_times",
@@ -79,7 +101,10 @@ __all__ = [
     "monte_carlo",
     "renewal_failure_gaps",
     "renewal_compose",
+    "renewal_compose_device",
+    "renewal_monte_carlo_device",
     "renewal_monte_carlo",
+    "renewal_monte_carlo_scenarios",
 ]
 
 SECONDS_PER_YEAR = 365.25 * 24 * 3600.0
@@ -129,8 +154,14 @@ jax.tree_util.register_dataclass(
 )
 
 
-def sweep_inputs(cfg: ScenarioConfig) -> SweepInputs:
-    """Flatten a ``ScenarioConfig`` into sweep-engine arrays."""
+def sweep_inputs(cfg: ScenarioConfig, dtype=jnp.float32) -> SweepInputs:
+    """Flatten a ``ScenarioConfig`` into sweep-engine arrays.
+
+    ``dtype`` is float32 for the single-failure sweep; the device renewal
+    engine builds float64 inputs (under ``jax.experimental.enable_x64``) so
+    the scan geometry matches the host float64 oracle, down-casting to
+    float32 only at the Algorithm-1 dispatch.
+    """
     ages = [s.ckpt_age for s in cfg.survivors]
     if max(ages, default=0.0) > cfg.ckpt_interval or cfg.t_reexec > cfg.ckpt_interval:
         # the sawtooth closed form assumes no node starts with an overdue
@@ -139,24 +170,24 @@ def sweep_inputs(cfg: ScenarioConfig) -> SweepInputs:
             f"{cfg.name}: ckpt_age/t_reexec exceed ckpt_interval "
             f"(ages {ages}, t_reexec {cfg.t_reexec}, interval {cfg.ckpt_interval})"
         )
-    f32 = lambda x: jnp.asarray(x, jnp.float32)
+    fx = lambda x: jnp.asarray(x, dtype)
     return SweepInputs(
-        exec_rem0=f32([s.exec_to_rendezvous for s in cfg.survivors]),
-        period=f32([s.rendezvous_period for s in cfg.survivors]),
-        age0=f32([s.ckpt_age for s in cfg.survivors]),
-        reexec0=f32(cfg.t_reexec),
-        t_down=f32(cfg.t_down),
-        t_restart=f32(cfg.t_restart),
-        interval=f32(cfg.ckpt_interval),
-        dur=f32(cfg.ckpt_duration),
+        exec_rem0=fx([s.exec_to_rendezvous for s in cfg.survivors]),
+        period=fx([s.rendezvous_period for s in cfg.survivors]),
+        age0=fx([s.ckpt_age for s in cfg.survivors]),
+        reexec0=fx(cfg.t_reexec),
+        t_down=fx(cfg.t_down),
+        t_restart=fx(cfg.t_restart),
+        interval=fx(cfg.ckpt_interval),
+        dur=fx(cfg.ckpt_duration),
         move_ahead=jnp.asarray(cfg.move_ahead),
-        move_frac=f32(cfg.move_ahead_frac),
+        move_frac=fx(cfg.move_ahead_frac),
         wait_mode=jnp.asarray(int(cfg.wait_mode), jnp.int32),
-        mu1=f32(cfg.mu1),
-        mu2=f32(cfg.mu2),
-        p_idle_wait=f32(cfg.profile.p_idle_wait),
-        ladder=em.LadderArrays.from_table(cfg.profile.power_table),
-        sleep=em.SleepArrays.from_spec(cfg.profile.sleep),
+        mu1=fx(cfg.mu1),
+        mu2=fx(cfg.mu2),
+        p_idle_wait=fx(cfg.profile.p_idle_wait),
+        ladder=em.LadderArrays.from_table(cfg.profile.power_table, dtype),
+        sleep=em.SleepArrays.from_spec(cfg.profile.sleep, dtype),
         peer=tuple(s.peer for s in cfg.survivors),
     )
 
@@ -333,10 +364,11 @@ def summarize(res: SweepResult) -> SweepSummary:
     d = res.decision
     saving = np.asarray(d.saving, np.float64)
     # decision arrays may carry extra leading batch dims (e.g. a mu-band)
-    # that the geometry does not: broadcast the validity mask up.
+    # that the geometry — and mu-independent fields like feasible_any — do
+    # not: broadcast both the validity mask and every picked field up.
     ok = np.broadcast_to(np.asarray(res.chain_ok, bool), saving.shape)
     valid = ok.reshape(-1)
-    pick = lambda a: np.asarray(a).reshape(-1)[valid]
+    pick = lambda a: np.broadcast_to(np.asarray(a), ok.shape).reshape(-1)[valid]
     saving = saving.reshape(-1)[valid]
     actions = pick(d.wait_action)
     if saving.size == 0:
@@ -497,6 +529,7 @@ class RenewalResult:
     exec_rem: np.ndarray     # (R, K, N) survivor work-to-rendezvous at failure
     t_failed: np.ndarray     # (R, K, N) eq. 14 per epoch
     t_renewal: np.ndarray    # (R, K) epoch duration T_E
+    n_ckpt: np.ndarray       # (R, K, N, F) planned checkpoints per ladder level
     failed_node: np.ndarray  # (R, K) which node failed (labeling only)
     n_failures: np.ndarray   # (R,)
     truncated: np.ndarray    # (R,) bool: exhausted max_failures before makespan
@@ -527,10 +560,19 @@ def renewal_failure_gaps(
     epoch gap is the minimum of ``n_nodes`` fresh draws and the failing node
     is the argmin.  Returns ``(gaps, failed_node)`` of shape
     ``(n_runs, max_failures)``, float64/int64.
+
+    The unit draws and the MTBF scaling both happen in float32 before the
+    float64 cast: ``jax.random`` emits identical float32 bits with and
+    without x64 enabled, so the host oracle and the device engine
+    (``renewal_monte_carlo_device``, which samples inside its jitted
+    program) see *bit-identical* failure histories for the same key.
     """
     draws = np.asarray(
-        jax.random.exponential(key, (n_runs, max_failures, n_nodes)), np.float64
-    ) * float(mtbf_s)
+        jax.random.exponential(key, (n_runs, max_failures, n_nodes),
+                               dtype=jnp.float32)
+        * jnp.asarray(mtbf_s, jnp.float32),
+        np.float64,
+    )
     return draws.min(axis=-1), draws.argmin(axis=-1)
 
 
@@ -551,18 +593,28 @@ def renewal_compose(cfg: ScenarioConfig, gaps, makespan_s: float,
     float64, and Algorithm 1 evaluates every (run, epoch, survivor) point in
     a single jitted dispatch.  Cross-validated pointwise against
     ``simulator.simulate_run`` in tests/test_renewal.py.
+
+    Occurrence / truncation semantics (shared verbatim with the device
+    path, regression-tested in tests/test_renewal_device.py):
+
+      * epoch ``k`` *occurs* in run ``r`` iff the run is still alive and
+        ``bal_elapsed + gaps[r, k] <= makespan_s`` — a gap landing exactly
+        on the makespan boundary still occurs (mirroring ``simulate_run``'s
+        ``>``-break);
+      * the first non-occurring epoch kills the run (everything after it is
+        dropped, ``valid`` False, outputs hold placeholder values);
+      * ``n_failures`` counts occurring epochs; ``truncated`` flags runs
+        that consumed *all* ``max_failures`` sampled gaps while balanced
+        time still remained (``alive & (bal_elapsed < makespan_s)``) — more
+        failures would have been drawn.  A run killed by an overlong gap is
+        never truncated.
+
+    This is the float64 host oracle; ``renewal_compose_device`` is the
+    fused scan over epochs x runs x scenarios that replaces it on the hot
+    path.
     """
-    if any(sv.peer != 0 for sv in cfg.survivors):
-        raise ValueError(
-            f"{cfg.name}: renewal composition requires direct blockers (peer == 0)")
+    _check_renewal_config(cfg)
     ages0 = np.array([s.ckpt_age for s in cfg.survivors], np.float64)
-    if np.any(ages0 > cfg.ckpt_interval) or cfg.t_reexec > cfg.ckpt_interval:
-        raise ValueError(
-            f"{cfg.name}: ckpt_age/t_reexec exceed ckpt_interval")
-    if any(s.level != 0 for s in cfg.survivors):
-        raise ValueError(
-            f"{cfg.name}: renewal composition starts from a balanced app "
-            "(survivor levels must be 0; non-fa starts are single-failure inputs)")
 
     gaps = np.atleast_2d(np.asarray(gaps, np.float64))            # (R, K)
     n_runs, max_failures = gaps.shape
@@ -641,8 +693,7 @@ def renewal_compose(cfg: ScenarioConfig, gaps, makespan_s: float,
         ct_ref_k[:, k] = exec_rem * beta0 + np.asarray(plan.n_ckpt)[..., 0] * dur * gamma0
 
         # re-anchor: coordinated resync checkpoint -> ages 0, progress P*
-        gap_wrap = np.mod(p_star[:, None] - exec_rem, period)
-        exec_next = np.where(gap_wrap == 0.0, period, period - gap_wrap)
+        exec_next = post_recovery_anchor(exec_rem, period)
         exec_anchor = np.where(occurs[:, None], exec_next, exec_anchor)
         ages = np.where(occurs[:, None], 0.0, ages)
         reexec_age = np.where(occurs, 0.0, reexec_age)
@@ -692,6 +743,7 @@ def renewal_compose(cfg: ScenarioConfig, gaps, makespan_s: float,
         exec_rem=exec_rem_k,
         t_failed=t_failed_k,
         t_renewal=t_renewal_k,
+        n_ckpt=n_ckpt_k,
         failed_node=np.where(valid, failed_node, -1),
         n_failures=valid.sum(axis=1),
         truncated=alive & (bal_elapsed < makespan_s),
@@ -704,6 +756,446 @@ def renewal_compose(cfg: ScenarioConfig, gaps, makespan_s: float,
         energy_int=energy_int,
         saving=energy_ref - energy_int,
     )
+
+
+# ---------------------------------------------------------------------------
+# device-resident renewal engine: one jitted scan over epochs x runs x scenarios
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RenewalDeviceResult:
+    """Device-resident analog of ``RenewalResult``, batched over scenarios.
+
+    All fields are jax arrays with leading ``(S, R)`` axes — stacked
+    scenarios x runs; ``decision`` fields are ``(S, R, K, N)`` float32
+    (identical math to the host dispatch), geometry and energy fields are
+    float64.  ``gaps`` is ``(R, K)``, shared across scenarios: the same
+    failure histories hit every stacked scenario, exactly as when the host
+    oracle is called per scenario with one PRNG key.  Epochs with ``valid``
+    False hold placeholder values and are excluded from every total.
+    """
+
+    decision: strategies.Decision
+    valid: jax.Array          # (S, R, K) bool
+    gaps: jax.Array           # (R, K) balanced-execution gaps as evaluated
+    t_fail: jax.Array         # (S, R, K) absolute (snapped) failure instants
+    exec_rem: jax.Array       # (S, R, K, N)
+    t_failed: jax.Array       # (S, R, K, N) eq. 14 per epoch
+    t_renewal: jax.Array      # (S, R, K) epoch duration T_E
+    failed_node: jax.Array    # (S, R, K) which node failed (labeling only)
+    n_failures: jax.Array     # (S, R)
+    truncated: jax.Array      # (S, R) bool (same semantics as the host path)
+    end_time: jax.Array       # (S, R)
+    balanced_energy: jax.Array  # (S, R)
+    epoch_ref: jax.Array      # (S, R, K, N)
+    epoch_int: jax.Array      # (S, R, K, N)
+    epoch_failed: jax.Array   # (S, R, K)
+    energy_ref: jax.Array     # (S, R)
+    energy_int: jax.Array     # (S, R)
+    saving: jax.Array         # (S, R)
+
+
+jax.tree_util.register_dataclass(
+    RenewalDeviceResult,
+    data_fields=[
+        "decision", "valid", "gaps", "t_fail", "exec_rem", "t_failed",
+        "t_renewal", "failed_node", "n_failures", "truncated", "end_time",
+        "balanced_energy", "epoch_ref", "epoch_int", "epoch_failed",
+        "energy_ref", "energy_int", "saving",
+    ],
+    meta_fields=[],
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class RenewalDeviceStats:
+    """Hot-path output of the device renewal engine: whole-run quantities
+    plus integer action counts, nothing per-epoch.
+
+    At production batch sizes the per-epoch diagnostic arrays of
+    ``RenewalDeviceResult`` dominate wall time (they are pure output
+    traffic); this lean view leaves them on the device floor.  The counts
+    divide by ``n_points`` on the host, so the derived occupancy rates are
+    *exactly* the float64 oracle's ``np.mean`` over the same valid points.
+    """
+
+    n_failures: jax.Array     # (S, R) int32
+    truncated: jax.Array      # (S, R) bool
+    end_time: jax.Array       # (S, R)
+    balanced_energy: jax.Array  # (S, R)
+    energy_ref: jax.Array     # (S, R)
+    energy_int: jax.Array     # (S, R)
+    saving: jax.Array         # (S, R)
+    n_points: jax.Array       # (S, R) valid (epoch, survivor) points per run
+    n_sleep: jax.Array        # (S, R) int32 counts over valid points
+    n_min_freq: jax.Array     # (S, R)
+    n_comp_changed: jax.Array  # (S, R)
+    n_infeasible: jax.Array   # (S, R)
+    failed_counts: jax.Array  # (S, n_nodes) failures attributed per node
+
+
+jax.tree_util.register_dataclass(
+    RenewalDeviceStats,
+    data_fields=[
+        "n_failures", "truncated", "end_time", "balanced_energy",
+        "energy_ref", "energy_int", "saving", "n_points", "n_sleep",
+        "n_min_freq", "n_comp_changed", "n_infeasible", "failed_counts",
+    ],
+    meta_fields=[],
+)
+
+
+def _renewal_scan(inp: SweepInputs, gaps: jax.Array, makespan_s,
+                  stats: bool = False):
+    """Whole-run renewal recursion for ONE scenario x ONE run as a
+    ``lax.scan`` over failure epochs.
+
+    The carry is the re-anchored state ``(ages, exec_anchor, reexec_age,
+    bal_elapsed, t_anchor, alive)``; each step advances the
+    checkpoint/rendezvous sawtooths to the failure instant and re-anchors —
+    the exact recursion of ``renewal_compose``, but traced once and
+    compiled.  The balanced-span energy, checkpoint plan, Algorithm-1
+    dispatch, and trailing-span accounting run *after* the scan over the
+    stacked per-epoch states (still the same jitted program), where XLA
+    vectorizes them across the whole grid.  Must be traced under
+    ``enable_x64`` with float64 inputs: wall-clock anchors grow to the
+    makespan and would lose ~0.5 s to float32 over month-long runs, while
+    Algorithm 1 is dispatched on float32 casts of the float64 geometry —
+    the very same values the host oracle feeds it.
+    ``_renewal_device_core`` vmaps this over runs and stacked scenarios.
+
+    ``stats=True`` is the hot-path mode: per-epoch diagnostic arrays are
+    never materialized; only whole-run energies and integer action counts
+    leave the program (the arrays dominate wall time at small batch sizes
+    — they are pure output traffic, the decisions are computed either
+    way).
+    """
+    n = inp.period.shape[0]
+    n_nodes = n + 1
+    f8 = lambda x: jnp.asarray(x, jnp.float64)
+    f4 = lambda x: jnp.asarray(x, jnp.float32)
+    interval, dur = f8(inp.interval), f8(inp.dur)
+    period = f8(inp.period)
+    beta, gamma = f8(inp.ladder.beta), f8(inp.ladder.gamma)
+    p_comp0, p_ckpt0 = f8(inp.ladder.p_comp[0]), f8(inp.ladder.p_ckpt[0])
+    beta0, gamma0 = beta[0], gamma[0]
+    dur_fa = dur * gamma0
+    t_restart = f8(inp.t_restart)
+    t_dr = f8(inp.t_down) + t_restart
+    makespan = f8(makespan_s)
+    # Algorithm 1 runs in float32 exactly as on the host path
+    ladder32 = jax.tree.map(lambda a: a.astype(jnp.float32), inp.ladder)
+    sleep32 = jax.tree.map(lambda a: a.astype(jnp.float32), inp.sleep)
+
+    # The scan body carries ONLY the re-anchor recursion — the part with a
+    # true epoch-to-epoch dependency.  Everything with a ladder axis
+    # (checkpoint plan, Algorithm 1) or that is pure per-epoch arithmetic
+    # (span energies, trailing spans) is evaluated AFTER the scan over the
+    # stacked (K, ...) epoch states, where XLA vectorizes it across the
+    # whole epochs x runs x scenarios grid instead of re-issuing it inside
+    # a 32-step sequential loop.
+    def step(carry, delta):
+        # ages_all stacks the survivors' checkpoint ages with the failed
+        # node's lost-work age (the same sawtooth governs both), so one
+        # closed-form advance serves all N+1 nodes per step.
+        ages_all, exec_anchor, bal_elapsed, t_anchor, alive = carry
+        occurs = alive & (bal_elapsed + delta <= makespan)
+        age_all, work, _, d_eff_all = planning.advance_checkpoint_sawtooth(
+            ages_all, delta, interval, dur)                      # (N+1,)
+        rem = jnp.mod(exec_anchor - work[:-1], period)
+        exec_rem = jnp.where(rem == 0.0, period, rem)
+        d_eff_fail = d_eff_all[-1]
+        t_e = t_dr + age_all[-1] + jnp.max(exec_rem)             # epoch span T_E
+
+        # re-anchor: coordinated resync checkpoint -> ages 0, progress P*
+        new_carry = (
+            jnp.where(occurs, 0.0, ages_all),
+            jnp.where(occurs, post_recovery_anchor(exec_rem, period), exec_anchor),
+            jnp.where(occurs, bal_elapsed + d_eff_fail, bal_elapsed),
+            jnp.where(occurs, t_anchor + d_eff_fail + t_e + dur_fa, t_anchor),
+            alive & occurs,
+        )
+        ys = (occurs, age_all, work, exec_rem, d_eff_all) + (
+            () if stats else (jnp.where(occurs, t_anchor + d_eff_fail, 0.0),))
+        return new_carry, ys
+
+    init = (jnp.concatenate([f8(inp.age0), f8(inp.reexec0)[None]]),
+            f8(inp.exec_rem0), f8(0.0), f8(0.0), jnp.asarray(True))
+    carry, ys = jax.lax.scan(step, init, f8(gaps))
+    ages_all, exec_anchor, bal_elapsed, t_anchor, alive = carry
+    (valid, age_all, work_all, exec_rem_k, d_eff_all), t_fail = \
+        ys[:5], (None if stats else ys[5])
+
+    # --- per-epoch accounting, vectorized over the stacked epochs ----------
+    age_f = age_all[..., :-1]                                    # (K, N)
+    reexec_f = age_all[..., -1]                                  # (K,)
+    d_eff_fail = d_eff_all[..., -1]
+    t_recover = t_dr + reexec_f                                  # (K,)
+    t_failed_k = t_recover[..., None] + exec_rem_k               # (K, N)
+    p_star = jnp.max(exec_rem_k, axis=-1)
+    t_e = t_recover + p_star
+
+    # balanced span energy up to each node's (snapped) failure instant,
+    # plus the coordinated resync checkpoint closing each epoch.  At the
+    # snapped instant the span's checkpoint share is exactly the fired
+    # checkpoints, so ``work``/``d_eff - work`` from the scan's sawtooth
+    # *is* the ``balanced_span`` decomposition (both are exact multiples
+    # of ``dur`` — tests pin the identity) without recomputing it.
+    e_bal = jnp.sum(work_all * p_comp0 + (d_eff_all - work_all) * p_ckpt0,
+                    axis=-1)
+    balanced = jnp.sum(jnp.where(
+        valid, e_bal + n_nodes * dur_fa * p_ckpt0, 0.0))
+
+    # failed node over [failure, T_E]: down (0 W) + restart at P_ckpt +
+    # re-execution and post-recovery serving at P_comp
+    epoch_failed = jnp.where(
+        valid, t_restart * p_ckpt0 + (reexec_f + p_star) * p_comp0, 0.0)
+
+    # per-level checkpoint plan as F separate node-batch columns: the fa
+    # column comes from the shared checkpoint_plan (it also decides the
+    # move-ahead), the others from the same closed form — no (..., F)
+    # float64 array ever materializes.
+    plan0 = planning.checkpoint_plan(
+        exec_rem_k, age_f, t_failed_k,
+        interval=interval, dur=dur, beta=beta[:1], gamma=gamma[:1],
+        move_ahead=inp.move_ahead, move_frac=f8(inp.move_frac))
+    move = jnp.where(plan0.plan_move, 1.0, 0.0)
+    n_cols = [plan0.n_ckpt[..., 0]] + [
+        planning.timer_checkpoint_count(exec_rem_k, age_f, beta[f], interval)
+        + move
+        for f in range(1, beta.shape[0])
+    ]
+    decision = strategies.evaluate_strategies_fold(
+        f4(exec_rem_k), f4(t_failed_k), n_cols, f4(dur),
+        ladder32, sleep32, inp.wait_mode, f4(inp.p_idle_wait),
+        mu1=f4(inp.mu1), mu2=f4(inp.mu2))
+
+    # per-survivor epoch energy = window energy + trailing fa span to T_E
+    ct_ref = exec_rem_k * beta0 + n_cols[0] * dur * gamma0
+    t_e2 = t_e[..., None]
+    trail_ref = jnp.maximum(t_e2 - jnp.maximum(t_failed_k, ct_ref), 0.0) * p_comp0
+    trail_int = jnp.maximum(
+        t_e2 - jnp.maximum(t_failed_k, f8(decision.comp_time)), 0.0) * p_comp0
+    v2 = valid[..., None]
+    epoch_ref = jnp.where(v2, f8(decision.energy_reference) + trail_ref, 0.0)
+    epoch_int = jnp.where(v2, f8(decision.energy_intervened) + trail_int, 0.0)
+
+    # balanced tail: the rest of the failure-free work (mid-checkpoint snaps
+    # can nudge bal_elapsed slightly past the makespan; clamp)
+    span = jnp.maximum(makespan - bal_elapsed, 0.0)
+    w_t, ck_t = planning.balanced_span(ages_all, span, interval, dur)
+    balanced = balanced + jnp.sum(w_t * p_comp0 + ck_t * p_ckpt0)
+
+    e_failed = jnp.sum(epoch_failed)
+    energy_ref = balanced + jnp.sum(epoch_ref) + e_failed
+    energy_int = balanced + jnp.sum(epoch_int) + e_failed
+    common = dict(
+        valid=valid,
+        n_failures=jnp.sum(valid.astype(jnp.int32)),
+        truncated=alive & (bal_elapsed < makespan),
+        end_time=t_anchor + span,
+        balanced_energy=balanced,
+        energy_ref=energy_ref,
+        energy_int=energy_int,
+        saving=energy_ref - energy_int,
+    )
+    if stats:
+        # integer action counts over valid (epoch, survivor) points — the
+        # summary rates divide by the point count on the host, so they
+        # match the oracle's np.mean over the same points exactly.
+        i32 = lambda m: jnp.sum((v2 & m).astype(jnp.int32))
+        return dict(
+            common,
+            n_points=jnp.sum(valid.astype(jnp.int32)) * n,
+            n_sleep=i32(decision.wait_action == em.WaitAction.SLEEP),
+            n_min_freq=i32(decision.wait_action == em.WaitAction.MIN_FREQ),
+            n_comp_changed=i32(decision.comp_changed),
+            n_infeasible=i32(~decision.feasible_any),
+        )
+    return dict(
+        common,
+        decision=decision,
+        t_fail=t_fail,
+        exec_rem=exec_rem_k,
+        t_failed=t_failed_k,
+        t_renewal=jnp.where(valid, t_e, 0.0),
+        epoch_ref=epoch_ref,
+        epoch_int=epoch_int,
+        epoch_failed=epoch_failed,
+    )
+
+
+def _renewal_device_core(inp: SweepInputs, gaps: jax.Array, makespan_s,
+                         stats: bool = False):
+    """vmap the per-run scan over runs (gaps axis 0) and stacked scenarios
+    (inputs axis 0): the whole epochs x runs x scenarios composition is one
+    XLA program."""
+    scan = lambda i, g, m: _renewal_scan(i, g, m, stats=stats)
+    over_runs = jax.vmap(scan, in_axes=(None, 0, None))
+    return jax.vmap(over_runs, in_axes=(0, None, None))(inp, gaps, makespan_s)
+
+
+def _renewal_mc_core(inp: SweepInputs, key: jax.Array, makespan_s, mtbf_s,
+                     n_runs: int, max_failures: int, stats: bool = False):
+    """Fused Monte-Carlo entry: gap sampling (``renewal_failure_gaps``
+    semantics — float32 draws and MTBF scaling, so histories are
+    bit-identical to the host sampler) + the full composition, one jitted
+    program."""
+    n_nodes = inp.period.shape[-1] + 1
+    draws = jax.random.exponential(
+        key, (n_runs, max_failures, n_nodes), dtype=jnp.float32
+    ) * jnp.asarray(mtbf_s, jnp.float32)
+    gaps = jnp.min(draws, axis=-1).astype(jnp.float64)
+    failed = jnp.argmin(draws, axis=-1)
+    out = _renewal_device_core(inp, gaps, makespan_s, stats=stats)
+    if stats:
+        # per-node failure counts over valid epochs, reduced over runs
+        hit = out.pop("valid")[..., None] & (
+            failed[None, ..., None] == jnp.arange(n_nodes)[None, None, None])
+        out["failed_counts"] = jnp.sum(hit.astype(jnp.int32), axis=(1, 2))
+    return out, gaps, failed
+
+
+_renewal_device_jit = jax.jit(
+    _renewal_device_core, static_argnames=("stats",))
+_renewal_mc_jit = jax.jit(
+    _renewal_mc_core, static_argnames=("n_runs", "max_failures", "stats"))
+
+
+def _check_renewal_config(cfg: ScenarioConfig) -> None:
+    """The renewal preconditions shared by host and device paths."""
+    if any(sv.peer != 0 for sv in cfg.survivors):
+        raise ValueError(
+            f"{cfg.name}: renewal composition requires direct blockers (peer == 0)")
+    ages0 = np.array([s.ckpt_age for s in cfg.survivors], np.float64)
+    if np.any(ages0 > cfg.ckpt_interval) or cfg.t_reexec > cfg.ckpt_interval:
+        raise ValueError(
+            f"{cfg.name}: ckpt_age/t_reexec exceed ckpt_interval")
+    if any(s.level != 0 for s in cfg.survivors):
+        raise ValueError(
+            f"{cfg.name}: renewal composition starts from a balanced app "
+            "(survivor levels must be 0; non-fa starts are single-failure inputs)")
+
+
+def _cfg_fingerprint(cfg: ScenarioConfig) -> tuple:
+    """Hashable content key of everything ``sweep_inputs`` reads from a
+    config — the device-input cache below keys on it."""
+    pt = cfg.profile.power_table
+    sl = cfg.profile.sleep
+    return (
+        cfg.name, cfg.survivors, cfg.t_down, cfg.t_restart, cfg.t_reexec,
+        cfg.ckpt_interval, cfg.ckpt_duration, int(cfg.wait_mode),
+        cfg.move_ahead, cfg.move_ahead_frac, cfg.mu1, cfg.mu2,
+        cfg.profile.p_idle_wait,
+        pt.freq_ghz.tobytes(), pt.p_comp.tobytes(), pt.beta.tobytes(),
+        pt.p_ckpt.tobytes(), pt.gamma.tobytes(),
+        sl.t_go_sleep, sl.t_wakeup, sl.p_go_sleep, sl.p_wakeup, sl.p_sleep,
+    )
+
+
+_renewal_inputs_cache: dict = {}
+
+
+def _renewal_device_inputs(cfgs):
+    """Validate and stack scenarios into float64 ``SweepInputs`` (call under
+    ``enable_x64``).  Accepts one ``ScenarioConfig`` or a sequence; always
+    returns the list plus a stacked pytree with a leading scenario axis.
+
+    Stacking is memoized on the configs' *content*: rebuilding the device
+    arrays costs tens of milliseconds of host time (dozens of small
+    transfers), which would otherwise dominate the jitted dispatch itself
+    on repeated calls — the whole point of the device engine.
+    """
+    cfg_list = [cfgs] if isinstance(cfgs, ScenarioConfig) else list(cfgs)
+    if not cfg_list:
+        raise ValueError("no scenarios to compose")
+    cache_key = tuple(_cfg_fingerprint(c) for c in cfg_list)
+    stacked = _renewal_inputs_cache.get(cache_key)
+    if stacked is None:
+        for cfg in cfg_list:
+            _check_renewal_config(cfg)
+        inputs = [sweep_inputs(c, jnp.float64) for c in cfg_list]
+        shapes = {i.exec_rem0.shape for i in inputs}
+        ladders = {i.ladder.freq_ghz.shape for i in inputs}
+        if len(shapes) != 1 or len(ladders) != 1:
+            raise ValueError(
+                f"stacked scenarios must share survivor count and ladder size "
+                f"(got {shapes}, {ladders})")
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *inputs)
+        if len(_renewal_inputs_cache) >= 64:
+            _renewal_inputs_cache.clear()
+        _renewal_inputs_cache[cache_key] = stacked
+    return cfg_list, stacked
+
+
+def _wrap_device_result(out: dict, gaps: jax.Array,
+                        failed_node) -> RenewalDeviceResult:
+    valid = out["valid"]
+    if failed_node is None:
+        failed = jnp.zeros(gaps.shape, jnp.int32)
+    else:
+        failed = jnp.asarray(failed_node, jnp.int32)
+    failed = jnp.where(valid, jnp.broadcast_to(failed, valid.shape), -1)
+    return RenewalDeviceResult(gaps=gaps, failed_node=failed, **out)
+
+
+def _wrap_device_stats(out: dict) -> RenewalDeviceStats:
+    return RenewalDeviceStats(**out)
+
+
+def renewal_compose_device(cfgs, gaps, makespan_s: float,
+                           failed_node=None) -> RenewalDeviceResult:
+    """Compose whole-run multi-failure energy on device for explicit
+    failure histories.
+
+    The device analog of ``renewal_compose``: ``cfgs`` is one
+    ``ScenarioConfig`` or a sequence sharing survivor count and ladder size
+    (the Table-4 six); ``gaps`` is (R, K) or (K,) balanced-execution wall
+    seconds, shared across scenarios.  One jitted scan-over-epochs program
+    evaluates every (scenario, run, epoch, survivor) point; semantics —
+    occurrence, truncation, re-anchoring, energy accounting — match the
+    host float64 oracle at ~1e-9 relative (tests/test_renewal_device.py).
+    """
+    with enable_x64():
+        cfg_list, stacked = _renewal_device_inputs(cfgs)
+        gaps = jnp.atleast_2d(jnp.asarray(np.asarray(gaps, np.float64)))
+        out = _renewal_device_jit(stacked, gaps, float(makespan_s))
+        return _wrap_device_result(out, gaps, failed_node)
+
+
+def renewal_monte_carlo_device(
+    cfgs,
+    key: jax.Array,
+    *,
+    n_runs: int = 256,
+    makespan_s: float = 30 * 24 * 3600.0,
+    mtbf_s: float = 14 * 24 * 3600.0,
+    max_failures: int = 64,
+    stats: bool = False,
+):
+    """Whole-run Monte-Carlo with gap sampling fused into the device program.
+
+    Per-node exponential failure sequences (``renewal_failure_gaps``
+    semantics and bit-identical histories for the same key) are drawn with
+    ``jax.random`` *inside* the jitted program, then composed by the same
+    scan as ``renewal_compose_device`` — sampling, geometry, Algorithm 1,
+    and whole-run reduction execute as one dispatch per
+    (scenario-batch, run-batch).
+
+    ``stats=False`` returns the full ``RenewalDeviceResult`` (per-epoch
+    decisions and energies — the cross-validation view); ``stats=True``
+    returns the lean ``RenewalDeviceStats`` (whole-run energies + integer
+    action counts), the production hot path: at the benchmark's default
+    shape the diagnostic arrays are most of the wall time.
+    """
+    with enable_x64():
+        cfg_list, stacked = _renewal_device_inputs(cfgs)
+        out, gaps, failed = _renewal_mc_jit(
+            stacked, key, float(makespan_s), float(mtbf_s),
+            n_runs=n_runs, max_failures=max_failures, stats=stats)
+        if stats:
+            return _wrap_device_stats(out)
+        return _wrap_device_result(out, gaps, failed)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -735,6 +1227,135 @@ class RenewalMonteCarloSummary:
     annual_saving_j: float
 
 
+def _assemble_summary(
+    *,
+    counts,
+    per_node,
+    truncated,
+    energy_ref,
+    energy_int,
+    saving,
+    sleep_occupancy,
+    min_freq_rate,
+    comp_change_rate,
+    infeasible_rate,
+    n_runs: int,
+    makespan_s: float,
+    mtbf_s: float,
+    max_failures: int,
+) -> RenewalMonteCarloSummary:
+    """The single ``RenewalMonteCarloSummary`` construction behind both
+    engines: every derived formula (histogram, percentiles, saving pct,
+    annual scaling) exists once, so host and device summaries can only
+    differ where their inputs do — which the determinism test pins to
+    ~float64 round-off.  The engines differ only in how they derive the
+    action-occupancy *rates* (host: means over valid decision points;
+    device: on-device integer counts over the same points — identical
+    values by construction)."""
+    counts = np.asarray(counts)
+    energy_ref = np.asarray(energy_ref, np.float64)
+    saving = np.asarray(saving, np.float64)
+    mean_ref = float(energy_ref.mean())
+    mean_saving = float(saving.mean())
+    return RenewalMonteCarloSummary(
+        n_runs=n_runs,
+        makespan_s=float(makespan_s),
+        mtbf_s=float(mtbf_s),
+        max_failures=max_failures,
+        mean_failures=float(counts.mean()),
+        failure_count_hist={
+            int(c): float(np.mean(counts == c)) for c in np.unique(counts)},
+        per_node_failures=tuple(per_node),
+        truncated_rate=float(np.mean(np.asarray(truncated, bool))),
+        mean_energy_ref_j=mean_ref,
+        mean_energy_int_j=float(np.asarray(energy_int, np.float64).mean()),
+        mean_saving_j=mean_saving,
+        p5_saving_j=float(np.percentile(saving, 5)),
+        p95_saving_j=float(np.percentile(saving, 95)),
+        mean_saving_pct=float(100.0 * mean_saving / max(mean_ref, 1e-9)),
+        sleep_occupancy=sleep_occupancy,
+        min_freq_rate=min_freq_rate,
+        comp_change_rate=comp_change_rate,
+        infeasible_rate=infeasible_rate,
+        annual_saving_j=mean_saving * SECONDS_PER_YEAR / float(makespan_s),
+    )
+
+
+def _renewal_summary(
+    *,
+    valid,
+    failed_node,
+    truncated,
+    energy_ref,
+    energy_int,
+    saving,
+    wait_action,
+    comp_changed,
+    feasible_any,
+    n_survivors: int,
+    n_runs: int,
+    makespan_s: float,
+    mtbf_s: float,
+    max_failures: int,
+) -> RenewalMonteCarloSummary:
+    """Reduce one scenario's (R, K[, N]) host-oracle arrays to expectations
+    (rates as means over valid decision points; assembly shared with the
+    device path via ``_assemble_summary``)."""
+    valid = np.asarray(valid, bool)
+    counts = valid.sum(axis=1)
+    failed_node = np.asarray(failed_node)
+    per_node = tuple(
+        float(np.mean(np.sum((failed_node == m) & valid, axis=1)))
+        for m in range(n_survivors + 1))
+    v = valid[:, :, None] & np.ones(n_survivors, bool)
+    actions = np.asarray(wait_action)[v.nonzero()] if v.any() else np.array([])
+    pick = lambda a: np.asarray(a)[v.nonzero()]
+    return _assemble_summary(
+        counts=counts,
+        per_node=per_node,
+        truncated=truncated,
+        energy_ref=energy_ref,
+        energy_int=energy_int,
+        saving=saving,
+        sleep_occupancy=float(np.mean(actions == em.WaitAction.SLEEP))
+        if actions.size else 0.0,
+        min_freq_rate=float(np.mean(actions == em.WaitAction.MIN_FREQ))
+        if actions.size else 0.0,
+        comp_change_rate=float(np.mean(pick(comp_changed)))
+        if actions.size else 0.0,
+        infeasible_rate=float(np.mean(~np.asarray(pick(feasible_any), bool)))
+        if actions.size else 0.0,
+        n_runs=n_runs, makespan_s=makespan_s, mtbf_s=mtbf_s,
+        max_failures=max_failures,
+    )
+
+
+def _summarize_device_scenario(
+    stats: RenewalDeviceStats, s: int,
+    n_runs: int, makespan_s: float, mtbf_s: float, max_failures: int,
+) -> RenewalMonteCarloSummary:
+    """Summary from the lean device stats — rates rebuilt from the integer
+    counts (exactly ``np.mean`` over the oracle's valid points); assembly
+    shared with the host path via ``_assemble_summary``."""
+    n_pts = int(np.asarray(stats.n_points)[s].sum())
+    rate = (lambda c: float(np.int64(np.asarray(c)[s].sum()) / n_pts)) \
+        if n_pts else (lambda c: 0.0)
+    return _assemble_summary(
+        counts=np.asarray(stats.n_failures)[s],
+        per_node=(float(c) / n_runs for c in np.asarray(stats.failed_counts)[s]),
+        truncated=np.asarray(stats.truncated, bool)[s],
+        energy_ref=np.asarray(stats.energy_ref, np.float64)[s],
+        energy_int=np.asarray(stats.energy_int, np.float64)[s],
+        saving=np.asarray(stats.saving, np.float64)[s],
+        sleep_occupancy=rate(stats.n_sleep),
+        min_freq_rate=rate(stats.n_min_freq),
+        comp_change_rate=rate(stats.n_comp_changed),
+        infeasible_rate=rate(stats.n_infeasible),
+        n_runs=n_runs, makespan_s=makespan_s, mtbf_s=mtbf_s,
+        max_failures=max_failures,
+    )
+
+
 def renewal_monte_carlo(
     cfg: ScenarioConfig,
     key: jax.Array,
@@ -742,53 +1363,71 @@ def renewal_monte_carlo(
     makespan_s: float = 30 * 24 * 3600.0,
     mtbf_s: float = 14 * 24 * 3600.0,
     max_failures: int = 64,
+    engine: str = "device",
 ) -> RenewalMonteCarloSummary:
     """Monte-Carlo whole-run energy under per-node exponential failures.
 
-    Samples ``n_runs`` failure histories (``renewal_failure_gaps``:
-    independent Poisson failures per node, quiesce policy for arrivals
-    during an open epoch), composes each run analytically
-    (``renewal_compose``), and reduces to whole-run expectations.
-    Deterministic for a fixed ``key``.  ``makespan_s`` is the application's
-    balanced-execution wall length; recovery epochs extend the wall end
-    beyond it (``RenewalResult.end_time``).
+    Samples ``n_runs`` failure histories (``renewal_failure_gaps``
+    semantics: independent Poisson failures per node, quiesce policy for
+    arrivals during an open epoch), composes each run, and reduces to
+    whole-run expectations.  Deterministic for a fixed ``key``.
+    ``makespan_s`` is the application's balanced-execution wall length;
+    recovery epochs extend the wall end beyond it.
+
+    ``engine="device"`` (default) runs the fused jitted program
+    (``renewal_monte_carlo_device``); ``engine="host"`` runs the float64
+    oracle (``renewal_compose``) — same histories, same summary reduction,
+    pinned together by tests/test_renewal_device.py.  For several scenarios
+    at once use ``renewal_monte_carlo_scenarios`` (one device dispatch).
     """
+    kw = dict(n_runs=n_runs, makespan_s=makespan_s, mtbf_s=mtbf_s,
+              max_failures=max_failures)
+    if engine == "device":
+        res = renewal_monte_carlo_device(cfg, key, stats=True, **kw)
+        return _summarize_device_scenario(jax.device_get(res), 0, **kw)
+    if engine != "host":
+        raise ValueError(f"unknown engine {engine!r} (use 'device' or 'host')")
     n_nodes = len(cfg.survivors) + 1
     gaps, failed = renewal_failure_gaps(key, n_runs, n_nodes, max_failures, mtbf_s)
     res = renewal_compose(cfg, gaps, makespan_s, failed_node=failed)
-    counts = res.n_failures
-    hist = {int(c): float(np.mean(counts == c)) for c in np.unique(counts)}
-    per_node = tuple(
-        float(np.mean(np.sum((res.failed_node == m) & res.valid, axis=1)))
-        for m in range(n_nodes))
-    v = res.valid[:, :, None] & np.ones(len(cfg.survivors), bool)
-    actions = np.asarray(res.decision.wait_action)[v.nonzero()] \
-        if v.any() else np.array([])
-    pick = lambda a: np.asarray(a)[v.nonzero()]
-    mean_ref = float(res.energy_ref.mean())
-    mean_saving = float(res.saving.mean())
-    return RenewalMonteCarloSummary(
-        n_runs=n_runs,
-        makespan_s=float(makespan_s),
-        mtbf_s=float(mtbf_s),
-        max_failures=max_failures,
-        mean_failures=float(counts.mean()),
-        failure_count_hist=hist,
-        per_node_failures=per_node,
-        truncated_rate=float(np.mean(res.truncated)),
-        mean_energy_ref_j=mean_ref,
-        mean_energy_int_j=float(res.energy_int.mean()),
-        mean_saving_j=mean_saving,
-        p5_saving_j=float(np.percentile(res.saving, 5)),
-        p95_saving_j=float(np.percentile(res.saving, 95)),
-        mean_saving_pct=float(100.0 * mean_saving / max(mean_ref, 1e-9)),
-        sleep_occupancy=float(np.mean(actions == em.WaitAction.SLEEP))
-        if actions.size else 0.0,
-        min_freq_rate=float(np.mean(actions == em.WaitAction.MIN_FREQ))
-        if actions.size else 0.0,
-        comp_change_rate=float(np.mean(pick(res.decision.comp_changed)))
-        if actions.size else 0.0,
-        infeasible_rate=float(np.mean(~pick(res.decision.feasible_any)))
-        if actions.size else 0.0,
-        annual_saving_j=mean_saving * SECONDS_PER_YEAR / float(makespan_s),
+    return _renewal_summary(
+        valid=res.valid,
+        failed_node=res.failed_node,
+        truncated=res.truncated,
+        energy_ref=res.energy_ref,
+        energy_int=res.energy_int,
+        saving=res.saving,
+        wait_action=np.asarray(res.decision.wait_action),
+        comp_changed=np.asarray(res.decision.comp_changed),
+        feasible_any=np.asarray(res.decision.feasible_any),
+        n_survivors=len(cfg.survivors),
+        **kw,
     )
+
+
+def renewal_monte_carlo_scenarios(
+    cfgs: Sequence[ScenarioConfig],
+    key: jax.Array,
+    n_runs: int = 256,
+    makespan_s: float = 30 * 24 * 3600.0,
+    mtbf_s: float = 14 * 24 * 3600.0,
+    max_failures: int = 64,
+) -> dict:
+    """name -> ``RenewalMonteCarloSummary`` for stacked scenarios from ONE
+    fused device dispatch (sampling + scan + Algorithm 1 + reduction).
+
+    Every scenario sees the same sampled failure histories — exactly what
+    calling ``renewal_monte_carlo`` per scenario with the same key yields,
+    minus S-1 dispatches and all the host round-trips.
+    """
+    cfg_list = list(cfgs)
+    kw = dict(n_runs=n_runs, makespan_s=makespan_s, mtbf_s=mtbf_s,
+              max_failures=max_failures)
+    # one transfer for the whole stats pytree — per-field np.asarray would
+    # pay a blocking round-trip per (scenario, field)
+    res = jax.device_get(
+        renewal_monte_carlo_device(cfg_list, key, stats=True, **kw))
+    return {
+        cfg.name: _summarize_device_scenario(res, s, **kw)
+        for s, cfg in enumerate(cfg_list)
+    }

@@ -204,6 +204,13 @@ def test_mu_band_monotone_sleep_occupancy(dense_sweeps):
     base = dense_sweeps("scenario1_short_reexec")
     np.testing.assert_allclose(
         np.asarray(res.decision.saving)[2], np.asarray(base.decision.saving), rtol=1e-6)
+    # summarize handles the mu-band batch shape: mu-independent decision
+    # fields (feasible_any) broadcast against the (M, T, N) mask
+    # (regression: IndexError when pick() flattened without broadcasting)
+    s = sweep.summarize(res)
+    assert s.points == 5 * N_OFFSETS * 3
+    assert 0.0 <= s.infeasible_rate <= 1.0
+    assert np.isfinite(s.mean_saving_j)
 
 
 def test_wait_mode_axis_via_scenario_variants():
