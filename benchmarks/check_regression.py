@@ -8,9 +8,11 @@ regresses by more than ``THRESHOLD`` (30 %).
 Raw decisions/s are only comparable on like hardware, so the absolute rows
 are gated only when the ``meta/machine`` fingerprints match; the relative
 ``renewal_speedup`` row (device engine vs host oracle, timed on the same
-machine) is checked on every run, and a baseline row that disappears from
-the fresh record is itself a failure.  The fresh record is uploaded as a
-CI artifact regardless, so the per-machine trajectory accumulates.
+machine) is checked on every run, a baseline row that disappears from the
+fresh record is itself a failure, and the per-process renewal rows
+(``REQUIRED_ROW_PREFIXES``, e.g. the Weibull row) must be present no
+matter the hardware.  The fresh record is uploaded as a CI artifact
+regardless, so the per-machine trajectory accumulates.
 
 Usage:  python -m benchmarks.check_regression FRESH [BASELINE]
 
@@ -25,6 +27,12 @@ import sys
 
 THRESHOLD = 0.30
 DEFAULT_BASELINE = pathlib.Path(__file__).parent / "artifacts" / "BENCH_failure_sweep.json"
+
+# rows the fresh record must carry regardless of hardware: the benchmark
+# always emits them, so absence means the corresponding engine path broke
+# or was silently dropped (the per-process renewal row landed with the
+# failure-process subsystem — repro.core.failures)
+REQUIRED_ROW_PREFIXES = ("failure_sweep/renewal_weibull",)
 
 
 def _rows(path: pathlib.Path) -> dict:
@@ -56,6 +64,11 @@ def main(argv=None) -> int:
     fresh, base = _rows(fresh_path), _rows(base_path)
 
     failures = []
+
+    # machine-independent presence gate: required rows must exist at all
+    for prefix in REQUIRED_ROW_PREFIXES:
+        if not any(name.startswith(prefix) for name in fresh):
+            failures.append(f"required row missing from fresh record: {prefix}*")
 
     # machine-independent check, active on every run: the device-vs-host
     # renewal speedup is a ratio of two timings on the same machine

@@ -21,7 +21,10 @@ Both are reported as renewal decisions/s at the same default shape
 (256 runs x 32 epochs x 3 survivors); the speedup row is the device engine
 against the host oracle on the same end-to-end Monte-Carlo task (identical
 key, identical summaries out).  Timings are medians over interleaved
-repetitions so both paths see the same machine phases.
+repetitions so both paths see the same machine phases.  A per-process row
+(Weibull k=0.7 at equal MTBF, conditional-residual sampling fused into the
+device program — ``repro.core.failures``) tracks the failure-process axis;
+``benchmarks/check_regression.py`` gates on its presence.
 
 Run:  PYTHONPATH=src python -m benchmarks.failure_sweep [--json BENCH_failure_sweep.json] [--full]
 
@@ -40,7 +43,7 @@ import time
 import jax
 import numpy as np
 
-from repro.core import sweep
+from repro.core import failures, sweep
 from repro.core.scenarios import paper_scenarios
 
 N_OFFSETS = 4096
@@ -54,6 +57,8 @@ RENEWAL_MAX_FAILURES = 32
 RENEWAL_MAKESPAN_D = 30.0
 RENEWAL_MTBF_D = 7.0        # per-node MTBF
 RENEWAL_REPS = 7            # interleaved timing repetitions (median)
+RENEWAL_WEIBULL_K = 0.7     # per-process row: infant-mortality Weibull at
+                            # the same per-node MTBF as the exponential rows
 
 # --full scaling shape: one device dispatch
 FULL_RUNS = 4096
@@ -202,6 +207,39 @@ def renewal_throughput(
     }
 
 
+def renewal_process_throughput(
+    process,
+    n_runs: int = RENEWAL_RUNS,
+    max_failures: int = RENEWAL_MAX_FAILURES,
+    reps: int = RENEWAL_REPS,
+) -> dict:
+    """Renewal decisions/s for one non-exponential failure process on the
+    fused device engine — same six-scenario Monte-Carlo task as
+    ``renewal_throughput``'s device row, with the conditional-residual
+    sampling scan (``failures.sample_renewal_gaps``) fused into the
+    program instead of the closed-form exponential draws.  The summary of
+    one scenario rides along so the record also tracks *what* the process
+    does to whole-run savings, not just how fast it samples.
+    """
+    cfg_list = list(paper_scenarios().values())
+    key = jax.random.PRNGKey(1)
+    kw = dict(n_runs=n_runs, makespan_s=RENEWAL_MAKESPAN_D * 24 * 3600.0,
+              max_failures=max_failures, process=process)
+    fn = lambda: sweep.renewal_monte_carlo_scenarios(cfg_list, key, **kw)
+    summaries = fn()                       # warm (compile) + stats
+    dt = _median_time(fn, reps)
+    n = len(cfg_list) * n_runs * max_failures * len(cfg_list[0].survivors)
+    mc = summaries["scenario2_long_reexec"]
+    return {
+        "seconds": dt,
+        "decisions": n,
+        "decisions_per_s": n / dt,
+        "mean_failures": mc.mean_failures,
+        "mean_saving_j": mc.mean_saving_j,
+        "mean_saving_pct": mc.mean_saving_pct,
+    }
+
+
 def device_scaling(n_runs: int = FULL_RUNS, max_failures: int = FULL_MAX_FAILURES,
                    reps: int = 3) -> dict:
     """One fused dispatch at the large shape (--full): 4096 runs x 64 epochs
@@ -297,6 +335,22 @@ def run(full: bool = False) -> list:
         "derived": (
             f"{thr['speedup']:.1f}x_device_vs_host"
             f"_{thr['speedup_compose']:.1f}x_vs_compose_only"
+        ),
+    })
+    # per-process row: the failure-process axis on the fused device engine
+    # (conditional-residual sampling scan in place of the exponential
+    # closed form); benchmarks/check_regression.py gates on its presence
+    wthr = renewal_process_throughput(failures.Weibull.from_mtbf(
+        RENEWAL_WEIBULL_K, RENEWAL_MTBF_D * 24 * 3600.0))
+    rows.append({
+        "name": f"failure_sweep/renewal_weibull_device_6x{shape}",
+        "us_per_call": wthr["seconds"] * 1e6,
+        "decisions_per_s": wthr["decisions_per_s"],
+        "derived": (
+            f"{wthr['decisions_per_s']:.3e}dec/s"
+            f"_k={RENEWAL_WEIBULL_K}"
+            f"_failures={wthr['mean_failures']:.1f}"
+            f"_save_pct={wthr['mean_saving_pct']:.2f}"
         ),
     })
     if full:

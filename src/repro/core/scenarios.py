@@ -32,6 +32,11 @@ from repro.core.characterization import (
     PowerTable,
     paper_machine_profile,
 )
+# the sampling-side failure-state view: per-node failure-clock ages the
+# renewal sampler conditions on.  Implemented next to the sampler it must
+# mirror (core/failures.py); re-exported here with the other failure-state
+# views (FailureState, the sawtooth ages) it is the twin of.
+from repro.core.failures import failure_clock_ages
 from repro.core.simulator import NodeStart, ScenarioConfig
 
 __all__ = [
@@ -39,6 +44,7 @@ __all__ = [
     "scenario",
     "FailureState",
     "failure_state_at",
+    "failure_clock_ages",
     "shift_failure",
     "post_recovery_anchor",
     "post_recovery_config",

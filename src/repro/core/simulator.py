@@ -498,7 +498,8 @@ def _epoch_node_energy(segments, node: int, t_e: float, p_comp0: float):
     return energy + max(t_e - end, 0.0) * p_comp0
 
 
-def simulate_run(cfg: ScenarioConfig, gaps, makespan_s: float) -> RunResult:
+def simulate_run(cfg: ScenarioConfig, gaps, makespan_s: float, *,
+                 process=None, key=None, max_failures: int = 64) -> RunResult:
     """Event-driven multi-failure renewal run (reference + intervened).
 
     ``gaps`` are balanced-execution wall seconds between each renewal anchor
@@ -510,15 +511,35 @@ def simulate_run(cfg: ScenarioConfig, gaps, makespan_s: float) -> RunResult:
     single-failure event engine on the analytically shifted state; between
     epochs the application runs balanced at fa.  The failure-during-recovery
     policy is *quiesce*: a failure arriving while an epoch is open defers to
-    the renewal point, which by exponential memorylessness is equivalent to
-    drawing the gap from the anchor (docs/sweep.md).  After every epoch the
-    runtime takes a coordinated re-synchronization checkpoint and the state
-    re-anchors via ``scenarios.post_recovery_config``.
+    the renewal point — equivalent to drawing the gap from the anchor for
+    the memoryless exponential, and realized by age-conditioned
+    conditional-residual sampling for every other process (docs/failures.md).
+    After every epoch the runtime takes a coordinated re-synchronization
+    checkpoint and the state re-anchors via
+    ``scenarios.post_recovery_config``.
+
+    Instead of explicit ``gaps``, the event engine accepts a failure
+    *process*: with ``gaps=None``, one run's history is drawn from the
+    ``repro.core.failures.FailureProcess`` in ``process`` under ``key`` —
+    the same sampler (and therefore bit-identical histories) the renewal
+    engines use, so a process-driven event run is directly comparable to
+    ``sweep.renewal_monte_carlo`` at ``n_runs=1``.
 
     ``tests/test_renewal.py`` cross-validates this against the analytic
     ``sweep.renewal_compose`` pointwise (per epoch, per node).
     """
     from repro.core.scenarios import failure_state_at, post_recovery_config, shift_failure
+
+    if gaps is None:
+        from repro.core import failures
+        if process is None or key is None:
+            raise ValueError("gaps=None requires a FailureProcess and a key")
+        gaps, _ = failures.renewal_gaps(
+            failures.as_process(process), key, 1, len(cfg.survivors) + 1,
+            max_failures)
+        gaps = gaps[0]
+    elif process is not None:
+        raise ValueError("pass explicit gaps OR a process, not both")
 
     if any(sv.peer != 0 for sv in cfg.survivors):
         raise ValueError(

@@ -25,15 +25,19 @@ against the event simulator on every Table-4 scenario; the two paths share
 the closed-form plan, so agreement is a real check of the energy accounting,
 not a tautology.
 
-On top of the dense grid sit exponential-MTBF Monte-Carlo sampling
+On top of the dense grid sit Monte-Carlo sampling over failure times
 (``monte_carlo``: expected annual savings per strategy under a fixed PRNG
-key) and summary statistics (``summarize``: mean/p5/p95 saving, sleep-gate
-occupancy, infeasibility rate).
+key — exponential-MTBF arrivals by default, any ``core.failures``
+process via ``process=``) and summary statistics (``summarize``:
+mean/p5/p95 saving, sleep-gate occupancy, infeasibility rate).
 
 The renewal layer (``renewal_failure_gaps`` / ``renewal_compose`` /
 ``renewal_monte_carlo``) extends the single-failure view to *whole runs*
-with repeated failures: per-node exponential failure sequences over an
-application makespan, each failure handled as a paper epoch, state
+with repeated failures: per-node failure sequences over an application
+makespan (exponential by default; Weibull / log-normal / gamma /
+trace-driven via ``core.failures``, whose non-memoryless processes sample
+age-conditioned **conditional residuals** under the quiesce policy —
+docs/failures.md), each failure handled as a paper epoch, state
 re-anchored after every recovery (``scenarios.post_recovery_config``), and
 whole-run energy composed from the closed-form sawtooth + one jitted
 Algorithm-1 dispatch across every (run, epoch, survivor) point.
@@ -79,6 +83,7 @@ import numpy as np
 from jax.experimental import enable_x64
 
 from repro.core import energy_model as em
+from repro.core import failures
 from repro.core import planning
 from repro.core import strategies
 from repro.core.scenarios import post_recovery_anchor
@@ -98,6 +103,7 @@ __all__ = [
     "sweep_scenarios",
     "summarize",
     "exponential_failure_offsets",
+    "failure_offsets",
     "monte_carlo",
     "renewal_failure_gaps",
     "renewal_compose",
@@ -418,6 +424,33 @@ def exponential_failure_offsets(
     return np.mod(arrivals, float(wrap_s)).astype(np.float32)
 
 
+def failure_offsets(
+    key: jax.Array,
+    n_samples: int,
+    process: failures.FailureProcess,
+    wrap_s: float,
+) -> np.ndarray:
+    """Failure offsets for a renewal arrival process with the given
+    inter-failure gap distribution — ``exponential_failure_offsets``
+    generalized to any ``FailureProcess``.
+
+    Gaps are unconditional float32 draws from the process (one cluster-level
+    arrival stream, one node failing per event as in the paper); absolute
+    arrival times accumulate in float64 and fold into ``[0, wrap_s)``
+    exactly as on the exponential path.  Requires scalar process parameters
+    (the per-node axis is a renewal-engine concept — see
+    ``renewal_failure_gaps``).
+    """
+    if np.size(process.mean_s()) != 1:
+        raise ValueError(
+            "failure_offsets samples one cluster-level arrival stream; "
+            "per-node heterogeneous parameters belong to the renewal "
+            "engines (renewal_failure_gaps / renewal_monte_carlo)")
+    gaps = np.asarray(process.sample(key, (n_samples,)), np.float64)
+    arrivals = np.cumsum(gaps)
+    return np.mod(arrivals, float(wrap_s)).astype(np.float32)
+
+
 @dataclasses.dataclass(frozen=True)
 class MonteCarloSummary:
     """Expected-value view of a scenario under a failure distribution."""
@@ -447,8 +480,9 @@ def monte_carlo(
     mtbf_s: float = 30 * 24 * 3600.0,
     wrap_s: Optional[float] = None,
     mu1: Optional[object] = None,
+    process: Optional[failures.FailureProcess] = None,
 ) -> MonteCarloSummary:
-    """Monte-Carlo expectation of the paper's strategies under exponential
+    """Monte-Carlo expectation of the paper's strategies under sampled
     failure times (one node failing per event, as in the paper).
 
     Each sampled failure is evaluated with the full analytic engine in the
@@ -459,10 +493,20 @@ def monte_carlo(
     action family (sleep / min-freq wait / compute-frequency change — points
     combining a frequency change with a wait action count toward the wait
     action, matching Table 4's labeling).
+
+    ``process=None`` keeps the paper's exponential arrivals at ``mtbf_s``
+    (bit-identical to the pre-process sampler); any other
+    ``failures.FailureProcess`` drives the arrival stream through
+    ``failure_offsets`` and the reported ``mtbf_s`` / annual scaling use the
+    process's mean gap.
     """
     if wrap_s is None:
         wrap_s = 64.0 * (cfg.ckpt_interval + cfg.ckpt_duration)
-    offsets = exponential_failure_offsets(key, n_samples, mtbf_s, wrap_s)
+    if process is None:
+        offsets = exponential_failure_offsets(key, n_samples, mtbf_s, wrap_s)
+    else:
+        offsets = failure_offsets(key, n_samples, process, wrap_s)
+        mtbf_s = float(np.mean(process.mean_s()))
     res = sweep_failure_times(cfg, offsets, mu1=mu1)
     if not bool(np.all(np.asarray(res.chain_ok))):
         # savings at chain-broken instants are meaningless (module docstring);
@@ -548,25 +592,40 @@ def renewal_failure_gaps(
     n_runs: int,
     n_nodes: int,
     max_failures: int,
-    mtbf_s: float,
+    mtbf_s: Optional[float] = None,
+    process: Optional[failures.FailureProcess] = None,
 ):
-    """Per-node exponential failure sequences, reduced to renewal-epoch gaps.
+    """Per-node failure sequences, reduced to renewal-epoch gaps.
 
-    Each of the ``n_nodes`` nodes fails as an independent Poisson process
-    with the given per-node MTBF.  Under the quiesce policy (a failure
-    arriving while an epoch is open defers to the renewal point) the
+    Each of the ``n_nodes`` nodes fails as an independent renewal process of
+    inter-failure gaps drawn from ``process`` (default: the paper's
+    exponential at the per-node ``mtbf_s``; per-node heterogeneous
+    parameters broadcast along the node axis).  Under the quiesce policy (a
+    failure arriving while an epoch is open defers to the renewal point) the
     exponential's memorylessness makes the deferred process equivalent to
     redrawing every node's time-to-failure at each renewal anchor — so the
     epoch gap is the minimum of ``n_nodes`` fresh draws and the failing node
-    is the argmin.  Returns ``(gaps, failed_node)`` of shape
+    is the argmin.  Non-exponential processes are *not* memoryless: the
+    sampler tracks per-node failure-clock ages and draws each node's
+    **conditional residual** (age-conditioned inverse CDF,
+    ``failures.sample_renewal_gaps``) instead, with the exponential kept as
+    the closed-form special case.  Returns ``(gaps, failed_node)`` of shape
     ``(n_runs, max_failures)``, float64/int64.
 
-    The unit draws and the MTBF scaling both happen in float32 before the
-    float64 cast: ``jax.random`` emits identical float32 bits with and
-    without x64 enabled, so the host oracle and the device engine
+    The unit draws and the inverse-CDF transforms both happen in float32
+    before the float64 cast: ``jax.random`` emits identical float32 bits
+    with and without x64 enabled, so the host oracle and the device engine
     (``renewal_monte_carlo_device``, which samples inside its jitted
     program) see *bit-identical* failure histories for the same key.
     """
+    if process is not None and not isinstance(process, failures.Exponential):
+        return failures.renewal_gaps(
+            failures.as_process(process, mtbf_s), key, n_runs, n_nodes,
+            max_failures)
+    if process is not None:
+        mtbf_s = process.mtbf_s
+    if mtbf_s is None:
+        raise ValueError("provide mtbf_s or a FailureProcess")
     draws = np.asarray(
         jax.random.exponential(key, (n_runs, max_failures, n_nodes),
                                dtype=jnp.float32)
@@ -1035,18 +1094,17 @@ def _renewal_device_core(inp: SweepInputs, gaps: jax.Array, makespan_s,
     return jax.vmap(over_runs, in_axes=(0, None, None))(inp, gaps, makespan_s)
 
 
-def _renewal_mc_core(inp: SweepInputs, key: jax.Array, makespan_s, mtbf_s,
+def _renewal_mc_core(inp: SweepInputs, key: jax.Array, makespan_s, process,
                      n_runs: int, max_failures: int, stats: bool = False):
     """Fused Monte-Carlo entry: gap sampling (``renewal_failure_gaps``
-    semantics — float32 draws and MTBF scaling, so histories are
-    bit-identical to the host sampler) + the full composition, one jitted
-    program."""
+    semantics — float32 draws and inverse-CDF transforms via
+    ``failures.sample_renewal_gaps``, so histories are bit-identical to the
+    host sampler; non-exponential processes run the conditional-residual
+    scan) + the full composition, one jitted program."""
     n_nodes = inp.period.shape[-1] + 1
-    draws = jax.random.exponential(
-        key, (n_runs, max_failures, n_nodes), dtype=jnp.float32
-    ) * jnp.asarray(mtbf_s, jnp.float32)
-    gaps = jnp.min(draws, axis=-1).astype(jnp.float64)
-    failed = jnp.argmin(draws, axis=-1)
+    gaps32, failed = failures.sample_renewal_gaps(
+        process, key, n_runs, max_failures, n_nodes)
+    gaps = gaps32.astype(jnp.float64)
     out = _renewal_device_core(inp, gaps, makespan_s, stats=stats)
     if stats:
         # per-node failure counts over valid epochs, reduced over runs
@@ -1172,14 +1230,17 @@ def renewal_monte_carlo_device(
     mtbf_s: float = 14 * 24 * 3600.0,
     max_failures: int = 64,
     stats: bool = False,
+    process: Optional[failures.FailureProcess] = None,
 ):
     """Whole-run Monte-Carlo with gap sampling fused into the device program.
 
-    Per-node exponential failure sequences (``renewal_failure_gaps``
-    semantics and bit-identical histories for the same key) are drawn with
-    ``jax.random`` *inside* the jitted program, then composed by the same
-    scan as ``renewal_compose_device`` — sampling, geometry, Algorithm 1,
-    and whole-run reduction execute as one dispatch per
+    Per-node failure sequences (``renewal_failure_gaps`` semantics and
+    bit-identical histories for the same key — exponential by default,
+    any ``failures.FailureProcess`` via ``process``, with conditional-
+    residual sampling for the non-memoryless ones) are drawn *inside* the
+    jitted program, then composed by the same scan as
+    ``renewal_compose_device`` — sampling, geometry, Algorithm 1, and
+    whole-run reduction execute as one dispatch per
     (scenario-batch, run-batch).
 
     ``stats=False`` returns the full ``RenewalDeviceResult`` (per-epoch
@@ -1188,10 +1249,11 @@ def renewal_monte_carlo_device(
     action counts), the production hot path: at the benchmark's default
     shape the diagnostic arrays are most of the wall time.
     """
+    proc = failures.as_process(process, mtbf_s)
     with enable_x64():
         cfg_list, stacked = _renewal_device_inputs(cfgs)
         out, gaps, failed = _renewal_mc_jit(
-            stacked, key, float(makespan_s), float(mtbf_s),
+            stacked, key, float(makespan_s), proc,
             n_runs=n_runs, max_failures=max_failures, stats=stats)
         if stats:
             return _wrap_device_stats(out)
@@ -1364,15 +1426,19 @@ def renewal_monte_carlo(
     mtbf_s: float = 14 * 24 * 3600.0,
     max_failures: int = 64,
     engine: str = "device",
+    process: Optional[failures.FailureProcess] = None,
 ) -> RenewalMonteCarloSummary:
-    """Monte-Carlo whole-run energy under per-node exponential failures.
+    """Monte-Carlo whole-run energy under per-node failure processes.
 
     Samples ``n_runs`` failure histories (``renewal_failure_gaps``
-    semantics: independent Poisson failures per node, quiesce policy for
-    arrivals during an open epoch), composes each run, and reduces to
-    whole-run expectations.  Deterministic for a fixed ``key``.
-    ``makespan_s`` is the application's balanced-execution wall length;
-    recovery epochs extend the wall end beyond it.
+    semantics: independent renewal failures per node — exponential at
+    ``mtbf_s`` by default, any ``failures.FailureProcess`` via ``process``
+    — with the quiesce policy for arrivals during an open epoch), composes
+    each run, and reduces to whole-run expectations.  Deterministic for a
+    fixed ``key``.  ``makespan_s`` is the application's balanced-execution
+    wall length; recovery epochs extend the wall end beyond it.  With a
+    ``process`` the summary's ``mtbf_s`` reports the process's mean gap
+    (averaged over heterogeneous nodes).
 
     ``engine="device"`` (default) runs the fused jitted program
     (``renewal_monte_carlo_device``); ``engine="host"`` runs the float64
@@ -1380,15 +1446,19 @@ def renewal_monte_carlo(
     pinned together by tests/test_renewal_device.py.  For several scenarios
     at once use ``renewal_monte_carlo_scenarios`` (one device dispatch).
     """
+    if process is not None:
+        mtbf_s = float(np.mean(failures.as_process(process).mean_s()))
     kw = dict(n_runs=n_runs, makespan_s=makespan_s, mtbf_s=mtbf_s,
               max_failures=max_failures)
     if engine == "device":
-        res = renewal_monte_carlo_device(cfg, key, stats=True, **kw)
+        res = renewal_monte_carlo_device(cfg, key, stats=True, process=process,
+                                         **kw)
         return _summarize_device_scenario(jax.device_get(res), 0, **kw)
     if engine != "host":
         raise ValueError(f"unknown engine {engine!r} (use 'device' or 'host')")
     n_nodes = len(cfg.survivors) + 1
-    gaps, failed = renewal_failure_gaps(key, n_runs, n_nodes, max_failures, mtbf_s)
+    gaps, failed = renewal_failure_gaps(key, n_runs, n_nodes, max_failures,
+                                        mtbf_s, process=process)
     res = renewal_compose(cfg, gaps, makespan_s, failed_node=failed)
     return _renewal_summary(
         valid=res.valid,
@@ -1412,21 +1482,25 @@ def renewal_monte_carlo_scenarios(
     makespan_s: float = 30 * 24 * 3600.0,
     mtbf_s: float = 14 * 24 * 3600.0,
     max_failures: int = 64,
+    process: Optional[failures.FailureProcess] = None,
 ) -> dict:
     """name -> ``RenewalMonteCarloSummary`` for stacked scenarios from ONE
     fused device dispatch (sampling + scan + Algorithm 1 + reduction).
 
     Every scenario sees the same sampled failure histories — exactly what
-    calling ``renewal_monte_carlo`` per scenario with the same key yields,
-    minus S-1 dispatches and all the host round-trips.
+    calling ``renewal_monte_carlo`` per scenario with the same key (and
+    ``process``) yields, minus S-1 dispatches and all the host round-trips.
     """
     cfg_list = list(cfgs)
+    if process is not None:
+        mtbf_s = float(np.mean(failures.as_process(process).mean_s()))
     kw = dict(n_runs=n_runs, makespan_s=makespan_s, mtbf_s=mtbf_s,
               max_failures=max_failures)
     # one transfer for the whole stats pytree — per-field np.asarray would
     # pay a blocking round-trip per (scenario, field)
     res = jax.device_get(
-        renewal_monte_carlo_device(cfg_list, key, stats=True, **kw))
+        renewal_monte_carlo_device(cfg_list, key, stats=True, process=process,
+                                   **kw))
     return {
         cfg.name: _summarize_device_scenario(res, s, **kw)
         for s, cfg in enumerate(cfg_list)

@@ -18,6 +18,7 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core import energy_model as em
+from repro.core import failures as F
 from repro.core import strategies, sweep
 from repro.core.scenarios import paper_scenarios
 from repro.core.simulator import simulate_run
@@ -26,6 +27,16 @@ GAPS = np.array([5000.0, 9000.0, 4000.0, 2500.0])
 MAKESPAN = 60000.0
 
 SCENARIOS = sorted(paper_scenarios())
+
+
+def _nonexp_processes():
+    """The non-exponential processes pinned across engines (the exponential
+    is covered by every pre-existing test in this file)."""
+    return [
+        F.Weibull.from_mtbf(0.7, 12000.0),
+        F.EmpiricalTrace(
+            np.random.default_rng(3).weibull(0.8, 400) * 15000.0),
+    ]
 
 
 def _device_slice(res, s):
@@ -161,6 +172,90 @@ def test_device_matches_host_energies_random_keys(seed):
         denom = np.maximum(np.abs(host.saving), 1e-4 * host.energy_ref)
         np.testing.assert_array_less(
             np.abs(d.saving - host.saving) / denom, 1e-4)
+
+
+# ---------------------------------------------------------------------------
+# failure processes: device == host for Weibull / trace-driven histories
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("process", _nonexp_processes(),
+                         ids=lambda p: p.label())
+def test_device_matches_host_nonexponential_processes(process):
+    """Acceptance bar for the failure-process axis: Weibull and
+    trace-driven renewal Monte-Carlo cross-validates device-vs-host at
+    <= 1e-4 relative on whole-run energies for all six Table-4 scenarios,
+    with the fixed-key failure histories bit-identical across engines
+    (the device engine samples the conditional-residual scan *inside* its
+    fused jitted program; the host oracle samples standalone)."""
+    cfgs = [paper_scenarios()[n] for n in SCENARIOS]
+    key = jax.random.PRNGKey(11)
+    makespan = 40000.0
+    gaps, failed = sweep.renewal_failure_gaps(key, 8, 4, 8, process=process)
+    dev = sweep.renewal_monte_carlo_device(
+        cfgs, key, n_runs=8, makespan_s=makespan, max_failures=8,
+        process=process)
+    np.testing.assert_array_equal(np.asarray(dev.gaps), gaps)      # bitwise
+    np.testing.assert_array_equal(
+        np.asarray(dev.failed_node)[0],
+        np.where(np.asarray(dev.valid)[0], failed, -1))
+    for s, cfg in enumerate(cfgs):
+        host = sweep.renewal_compose(cfg, gaps, makespan, failed_node=failed)
+        assert host.n_failures.mean() >= 2, cfg.name
+        np.testing.assert_array_equal(
+            np.asarray(dev.n_failures)[s], host.n_failures, err_msg=cfg.name)
+        for field in ("energy_ref", "energy_int"):
+            np.testing.assert_allclose(
+                np.asarray(getattr(dev, field))[s], getattr(host, field),
+                rtol=1e-4, err_msg=f"{cfg.name} {field} {process.label()}")
+        denom = np.maximum(np.abs(host.saving), 1e-4 * host.energy_ref)
+        np.testing.assert_array_less(
+            np.abs(np.asarray(dev.saving)[s] - host.saving) / denom, 1e-4)
+
+
+@pytest.mark.parametrize("process", _nonexp_processes(),
+                         ids=lambda p: p.label())
+def test_renewal_monte_carlo_engines_pinned_nonexponential(process):
+    """Fixed-key determinism pin extended to the new processes: the device
+    summary equals the host oracle's — integer fields and histograms
+    exactly, floats to float64 round-off — and stays deterministic under
+    the same key."""
+    cfg = paper_scenarios()["scenario2_long_reexec"]
+    kw = dict(n_runs=32, makespan_s=200000.0, max_failures=16)
+    dev = sweep.renewal_monte_carlo(cfg, jax.random.PRNGKey(3),
+                                    engine="device", process=process, **kw)
+    host = sweep.renewal_monte_carlo(cfg, jax.random.PRNGKey(3),
+                                     engine="host", process=process, **kw)
+    for field in dev.__dataclass_fields__:
+        a, b = getattr(dev, field), getattr(host, field)
+        if isinstance(a, float):
+            np.testing.assert_allclose(a, b, rtol=1e-9, err_msg=field)
+        else:
+            assert a == b, (field, a, b)
+    # the summary reports the process's mean gap as its MTBF
+    np.testing.assert_allclose(
+        dev.mtbf_s, float(np.mean(process.mean_s())), rtol=1e-6)
+    again = sweep.renewal_monte_carlo(cfg, jax.random.PRNGKey(3),
+                                      engine="device", process=process, **kw)
+    assert again == dev
+
+
+def test_renewal_scenarios_process_matches_per_scenario_device():
+    """The one-dispatch six-scenario path accepts a process and equals
+    per-scenario device calls under the same key."""
+    cfgs = paper_scenarios()
+    w = F.Weibull.from_mtbf(0.7, 9000.0)
+    kw = dict(n_runs=16, makespan_s=30000.0, max_failures=8)
+    stacked = sweep.renewal_monte_carlo_scenarios(
+        list(cfgs.values()), jax.random.PRNGKey(5), process=w, **kw)
+    name = SCENARIOS[2]
+    single = sweep.renewal_monte_carlo(
+        cfgs[name], jax.random.PRNGKey(5), engine="device", process=w, **kw)
+    for field in single.__dataclass_fields__:
+        a, b = getattr(stacked[name], field), getattr(single, field)
+        if isinstance(a, float):
+            np.testing.assert_allclose(a, b, rtol=1e-12, err_msg=field)
+        else:
+            assert a == b, (field, a, b)
 
 
 # ---------------------------------------------------------------------------
