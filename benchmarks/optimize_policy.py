@@ -1,0 +1,208 @@
+"""Policy-optimizer benchmark: policies/s for the fused grid evaluator.
+
+The optimizer's value proposition is that a whole policy grid — checkpoint
+interval x mu margins x wait mode — evaluates in ONE device dispatch with
+shared (common-random-numbers) failure histories, instead of one
+device-engine Monte-Carlo per policy.  This benchmark measures both sides
+of that claim on the same task:
+
+  * ``grid``       — ``core.optimize.evaluate_policy_grid`` for a
+    P-policy grid at (R runs x K epochs x N survivors): policies/s and
+    renewal decisions/s, one fused dispatch per call;
+  * ``sequential`` — the same P policies as P standalone
+    ``sweep.renewal_monte_carlo_device`` calls (identical numbers out, by
+    the CRN contract) — the dispatch-per-policy baseline the batched
+    evaluator replaces;
+  * ``speedup``    — the ratio, timed interleaved on the same machine.
+    At this shape on a contended CPU box it hovers near 1x (the fused
+    dispatch buys *variance elimination* — CRN — more than wall time), so
+    it is recorded for the trajectory but not gated;
+  * an ``optimum`` row recording where the optimizer lands (best /
+    knee interval, frontier size) so the record tracks *what* the
+    subsystem reports, not just how fast.
+
+``benchmarks/check_regression.py`` gates the grid row's *presence* on
+every run and its absolute decisions/s on like hardware, against the
+committed baseline (``benchmarks/artifacts/BENCH_optimize_policy.json``).
+
+Run:  PYTHONPATH=src python -m benchmarks.optimize_policy [--json PATH]
+"""
+from __future__ import annotations
+
+import json
+import statistics
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.core import energy_model as em
+from repro.core import failures, optimize, sweep
+from repro.core.scenarios import apply_policy, sparse_rendezvous_scenario
+from benchmarks.failure_sweep import machine_fingerprint
+
+# the benchmark workload: scenario 4's machine on the sparser-rendezvous
+# application of docs/optimize.md (the paper's 3600 s period pins the
+# interval optimum to the workload structure; a 4 h period exposes the
+# full checkpoint tradeoff the optimizer exists to price) — the single
+# definition shared with tests/test_optimize.py and examples/
+WORK_D = 2.0
+MTBF_H = 8.0
+N_RUNS = 64
+MAX_FAILURES = 64
+REPS = 5
+
+GRID_INTERVALS = 7
+GRID_MU1 = (3.8, 6.0, 9.0)
+GRID_WAIT = (em.WaitMode.ACTIVE, em.WaitMode.IDLE)
+
+
+def benchmark_config():
+    return sparse_rendezvous_scenario()
+
+
+def benchmark_table() -> optimize.PolicyTable:
+    return optimize.policy_grid(
+        ckpt_interval=np.geomspace(2400.0, 19200.0, GRID_INTERVALS),
+        mu1=list(GRID_MU1),
+        wait_mode=list(GRID_WAIT),
+    )
+
+
+def throughput(reps: int = REPS) -> dict:
+    """Interleaved median timings: fused grid vs dispatch-per-policy."""
+    cfg = benchmark_config()
+    table = benchmark_table()
+    key = jax.random.PRNGKey(1)
+    mtbf = MTBF_H * 3600.0
+    work = WORK_D * 24 * 3600.0
+    kw = dict(work_s=work, n_runs=N_RUNS, max_failures=MAX_FAILURES,
+              mtbf_s=mtbf)
+
+    def grid():
+        return optimize.evaluate_policy_grid(cfg, table, key, **kw)
+
+    makespans = optimize.wall_makespan(work, table.ckpt_interval,
+                                       cfg.ckpt_duration)
+
+    def sequential():
+        out = []
+        for p in range(len(table)):
+            cfg_p = apply_policy(cfg, **table.policy(p))
+            out.append(sweep.renewal_monte_carlo_device(
+                cfg_p, key, n_runs=N_RUNS, makespan_s=float(makespans[p]),
+                mtbf_s=mtbf, max_failures=MAX_FAILURES, stats=True))
+        jax.block_until_ready(out[-1].energy_int)
+        return out
+
+    res = grid()        # warm both paths (compile + input caches)
+    sequential()
+    t_grid, t_seq = [], []
+    for _ in range(reps):
+        t0 = time.perf_counter(); grid(); t_grid.append(time.perf_counter() - t0)
+        t0 = time.perf_counter(); sequential(); t_seq.append(time.perf_counter() - t0)
+    t_grid = statistics.median(t_grid)
+    t_seq = statistics.median(t_seq)
+
+    n_policies = len(table)
+    n_decisions = n_policies * N_RUNS * MAX_FAILURES * len(cfg.survivors)
+    return {
+        "result": res,
+        "n_policies": n_policies,
+        "grid_s": t_grid,
+        "seq_s": t_seq,
+        "policies_per_s": n_policies / t_grid,
+        "decisions_per_s": n_decisions / t_grid,
+        "seq_policies_per_s": n_policies / t_seq,
+        "speedup": t_seq / t_grid,
+    }
+
+
+def run() -> list:
+    thr = throughput()
+    res = thr["result"]
+    shape = f"{thr['n_policies']}x{N_RUNS}x{MAX_FAILURES}x3"
+    rows = [{
+        "name": "meta/machine",
+        "us_per_call": 0.0,
+        "decisions_per_s": 0.0,
+        "derived": machine_fingerprint(),
+    }, {
+        "name": f"optimize_policy/grid_{shape}",
+        "us_per_call": thr["grid_s"] * 1e6,
+        "decisions_per_s": thr["decisions_per_s"],
+        "derived": f"{thr['policies_per_s']:.1f}policies/s_one_dispatch",
+    }, {
+        "name": f"optimize_policy/sequential_{shape}",
+        "us_per_call": thr["seq_s"] * 1e6,
+        "decisions_per_s": 0.0,
+        "derived": f"{thr['seq_policies_per_s']:.1f}policies/s_per_policy_dispatch",
+    }, {
+        "name": "optimize_policy/batched_speedup",
+        "us_per_call": 0.0,
+        "decisions_per_s": 0.0,
+        "derived": f"{thr['speedup']:.1f}x_batched_vs_sequential",
+    }]
+
+    front = optimize.pareto_front(res.mean_energy_j, res.mean_makespan_s)
+    knee = res.policy(optimize.knee_point(
+        res.mean_energy_j, res.mean_makespan_s, front))
+    best = res.policy(res.best)
+    rows.append({
+        "name": f"optimize_policy/optimum_{res.scenario}",
+        "us_per_call": 0.0,
+        "decisions_per_s": 0.0,
+        "derived": (
+            f"best_T={best['ckpt_interval']:.0f}s"
+            f"_wait={em.WaitMode(best['wait_mode']).name.lower()}"
+            f"_knee_T={knee['ckpt_interval']:.0f}s"
+            f"_front={front.size}"
+        ),
+    })
+
+    # process dependence, one line: the exp-vs-Weibull(0.7) optimum shift
+    # at equal MTBF that docs/optimize.md documents
+    key = jax.random.PRNGKey(1)
+    table = optimize.policy_grid(
+        ckpt_interval=np.geomspace(2400.0, 19200.0, GRID_INTERVALS))
+    kw = dict(work_s=WORK_D * 24 * 3600.0, n_runs=N_RUNS,
+              max_failures=MAX_FAILURES)
+    cfg = benchmark_config()
+    mtbf = MTBF_H * 3600.0
+    opt = {}
+    for name, proc in (("exp", failures.Exponential(mtbf)),
+                       ("wb07", failures.Weibull.from_mtbf(0.7, mtbf))):
+        r = optimize.evaluate_policy_grid(cfg, table, key, process=proc, **kw)
+        opt[name] = float(table.ckpt_interval[r.best])
+    rows.append({
+        "name": "optimize_policy/process_shift",
+        "us_per_call": 0.0,
+        "decisions_per_s": 0.0,
+        "derived": (
+            f"exp_T={opt['exp']:.0f}s_wb07_T={opt['wb07']:.0f}s"
+            f"_shift={opt['wb07'] / opt['exp']:.2f}x"
+        ),
+    })
+    return rows
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    json_path = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        if i + 1 >= len(argv):
+            sys.exit("usage: python -m benchmarks.optimize_policy [--json PATH]")
+        json_path = argv[i + 1]
+    rows = run()
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    if json_path is not None:
+        with open(json_path, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"# wrote {json_path}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

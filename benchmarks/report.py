@@ -145,6 +145,45 @@ def renewal_table(n_runs: int = 128, makespan_d: float = 30.0,
     return "\n".join(out)
 
 
+def optimize_table() -> str:
+    """Policy-optimizer view: the energy/makespan frontier over the
+    benchmark grid, plus the equal-MTBF process shift (docs/optimize.md)."""
+    from benchmarks.optimize_policy import (
+        MTBF_H, WORK_D, benchmark_config, benchmark_table,
+    )
+
+    import jax
+
+    from repro.core import energy_model as em
+    from repro.core import optimize
+
+    cfg = benchmark_config()
+    res = optimize.evaluate_policy_grid(
+        cfg, benchmark_table(), jax.random.PRNGKey(1),
+        work_s=WORK_D * 24 * 3600.0, n_runs=64, max_failures=64,
+        mtbf_s=MTBF_H * 3600.0)
+    front = optimize.pareto_front(res.mean_energy_j, res.mean_makespan_s)
+    knee = optimize.knee_point(res.mean_energy_j, res.mean_makespan_s, front)
+    out = [
+        f"### Policy optimizer — {len(res)} policies, {res.n_runs} runs, "
+        f"{WORK_D:g} d work, {MTBF_H:g} h per-node MTBF ({cfg.name})",
+        "",
+        "| frontier point | interval | mu1 | wait | E[energy] | E[makespan] |",
+        "|---|---|---|---|---|---|",
+    ]
+    for i in front:
+        pol = res.policy(int(i))
+        labels = [l for l, hit in (("knee", int(i) == knee),
+                                   ("min energy", int(i) == res.best)) if hit]
+        tag = f" ({', '.join(labels)})" if labels else ""
+        out.append(
+            f"| {int(i)}{tag} | {pol['ckpt_interval']:.0f} s | "
+            f"{pol['mu1']:g} | {em.WaitMode(pol['wait_mode']).name.lower()} | "
+            f"{pol['mean_energy_j'] / 3.6e6:.2f} kWh | "
+            f"{pol['mean_makespan_s'] / 3600:.2f} h |")
+    return "\n".join(out)
+
+
 def main():
     print("## Dry-run records\n")
     for mesh in ("single", "multi"):
@@ -161,6 +200,9 @@ def main():
     print()
     print("## Renewal runs (multi-failure)\n")
     print(renewal_table())
+    print()
+    print("## Policy optimizer (energy vs makespan)\n")
+    print(optimize_table())
     print()
 
 

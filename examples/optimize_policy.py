@@ -1,0 +1,96 @@
+"""Which policy should an operator deploy?  (the policy optimizer)
+
+The paper shows fixed strategy configurations save energy under a failure;
+it never picks the checkpoint interval or the sleep-gate margins.  This
+example drives ``repro.core.optimize`` end to end:
+
+  1. a joint policy grid — checkpoint interval x mu1 x wait mode — for one
+    workload, evaluated in ONE fused device dispatch with common random
+    numbers (every policy sees the same failure histories);
+  2. the energy/makespan Pareto frontier and its knee: spending a little
+     wall time (shorter intervals bound re-execution) buys energy, up to a
+     point;
+  3. cross-entropy refinement of the continuous knobs around the grid
+     optimum — deterministic, monotone under CRN;
+  4. the process-dependence experiment of docs/optimize.md: at equal
+     per-node MTBF, Weibull k=0.7 failure clustering shifts the optimal
+     checkpoint interval longer than the exponential's.
+
+Run:  PYTHONPATH=src python examples/optimize_policy.py
+"""
+import jax
+import numpy as np
+
+from repro.core import energy_model as em
+from repro.core import optimize
+from repro.core.scenarios import sparse_rendezvous_scenario
+
+HOUR, DAY = 3600.0, 24 * 3600.0
+
+# Scenario 4's machine on a sparser-rendezvous application: with the
+# paper's 3600 s period the interval optimum pins to the workload structure
+# (docs/optimize.md §workload pinning); the 4 h period exposes the full
+# checkpoint-overhead vs re-execution tradeoff worth optimizing.
+cfg = sparse_rendezvous_scenario()
+
+key = jax.random.PRNGKey(0)
+WORK = 2 * DAY          # useful work — every policy runs the same app
+MTBF = 8 * HOUR         # per node
+
+# --- 1. the joint grid, one fused dispatch --------------------------------
+table = optimize.policy_grid(
+    ckpt_interval=np.geomspace(2400.0, 19200.0, 7),
+    mu1=[3.8, 6.0, 9.0],
+    wait_mode=[em.WaitMode.ACTIVE, em.WaitMode.IDLE],
+)
+opt = optimize.optimize_policy(
+    cfg, key, table=table, work_s=WORK, mtbf_s=MTBF,
+    n_runs=96, max_failures=96, refine=True,
+    cem_kw=dict(n_iters=4, population=16))
+
+best = opt.grid.policy(opt.grid.best)
+print(f"policy grid: {len(table)} policies x 96 runs, one dispatch "
+      f"({opt.process_label})")
+print(f"  grid optimum : interval {best['ckpt_interval']:.0f} s, "
+      f"mu1 {best['mu1']:g}, wait {em.WaitMode(best['wait_mode']).name}, "
+      f"E[energy] {best['mean_energy_j'] / 3.6e6:.2f} kWh, "
+      f"E[makespan] {best['mean_makespan_s'] / HOUR:.2f} h")
+
+# --- 2. the energy/makespan frontier --------------------------------------
+print(f"\nPareto frontier ({opt.pareto.size} non-dominated policies):")
+for i in opt.pareto:
+    pol = opt.grid.policy(int(i))
+    knee = "  <- knee" if pol == opt.knee else ""
+    print(f"  T={pol['ckpt_interval']:6.0f} s  "
+          f"wait={em.WaitMode(pol['wait_mode']).name.lower():6s} "
+          f"E={pol['mean_energy_j'] / 3.6e6:7.2f} kWh  "
+          f"M={pol['mean_makespan_s'] / HOUR:6.2f} h{knee}")
+
+# --- 3. CEM refinement ----------------------------------------------------
+print(f"\nCEM refinement ({opt.cem.n_evaluations} evaluations):")
+for it, h in enumerate(opt.cem.iterations):
+    print(f"  iter {it}: best E {h['best_energy_j'] / 3.6e6:.3f} kWh "
+          f"(interval mean {h['mean']['ckpt_interval']:.0f} s "
+          f"+- {h['std']['ckpt_interval']:.0f})")
+print(f"  refined optimum: interval {opt.best['ckpt_interval']:.0f} s, "
+      f"E[energy] {opt.best['mean_energy_j'] / 3.6e6:.3f} kWh "
+      f"(grid: {best['mean_energy_j'] / 3.6e6:.3f})")
+
+# --- 4. the optimum moves with the failure process ------------------------
+print("\nequal-MTBF process panel (same key -> shared uniform draws):")
+ivals = np.geomspace(2400.0, 19200.0, 13)
+tab = optimize.policy_grid(ckpt_interval=ivals)
+for name, proc in optimize.equal_mtbf_processes(MTBF).items():
+    res = optimize.evaluate_policy_grid(
+        cfg, tab, key, work_s=WORK, n_runs=256, max_failures=160,
+        process=proc)
+    rel = res.mean_energy_j / res.mean_energy_j.min() - 1.0
+    loc = float(np.sum(ivals * np.exp(-rel / 3e-3))
+                / np.sum(np.exp(-rel / 3e-3)))
+    print(f"  {name:14s} argmin T = {ivals[res.best]:6.0f} s   "
+          f"softmin location = {loc:6.0f} s   "
+          f"E[failures]/run = {res.mean_failures[res.best]:.1f}")
+print("\nWeibull k<1 clusters failures right after each restart — when the "
+      "post-recovery\nresync checkpoint has just bounded the loss — so "
+      "over-long intervals are punished\nless and the optimum shifts "
+      "longer (docs/optimize.md).")

@@ -245,6 +245,51 @@ def expected_savings(
     )
 
 
+def _expected_savings_grid(
+    profile: MachineProfile,
+    intervals: np.ndarray,
+    *,
+    t_down_s: float,
+    t_restart_s: float,
+    comp_to_block_s: float,
+    t_ckpt_s: float,
+    wait_mode: int,
+    grid: int,
+) -> list:
+    """``expected_savings`` for a whole interval batch in ONE jitted
+    dispatch: the (interval, failure-phase) grid is (I, G) and Algorithm 1
+    broadcasts over it exactly as it does over the sweep engine's batches.
+    Returns one ``ExpectedSavings`` per interval (same reductions as the
+    scalar path, per row)."""
+    ivals = jnp.asarray(intervals, jnp.float32)[:, None]          # (I, 1)
+    frac = jnp.linspace(0.0, 1.0, grid)[None, :]                  # (1, G)
+    reexec = ivals * frac                                         # (I, G)
+    t_failed = t_down_s + t_restart_s + reexec + comp_to_block_s
+    d = strategies.evaluate_strategies_profile(
+        profile,
+        jnp.full(reexec.shape, comp_to_block_s),
+        t_failed,
+        jnp.zeros(reexec.shape),
+        t_ckpt_s,
+        jnp.full(reexec.shape, wait_mode, jnp.int32),
+    )
+    saving = np.asarray(d.saving, np.float64)
+    saving_pct = np.asarray(d.saving_pct, np.float64)
+    actions = np.asarray(d.wait_action)
+    comp_changed = np.asarray(d.comp_changed)
+    return [
+        ExpectedSavings(
+            mean_saving_j=float(saving[i].mean()),
+            mean_saving_pct=float(saving_pct[i].mean()),
+            p_sleep=float(np.mean(actions[i] == em.WaitAction.SLEEP)),
+            p_min_freq=float(np.mean(actions[i] == em.WaitAction.MIN_FREQ)),
+            p_comp_change=float(np.mean(comp_changed[i])),
+            grid=grid,
+        )
+        for i in range(len(intervals))
+    ]
+
+
 def optimal_checkpoint_interval(
     profile: MachineProfile,
     *,
@@ -258,19 +303,39 @@ def optimal_checkpoint_interval(
     intervals: Optional[np.ndarray] = None,
 ):
     """Sweep the checkpoint interval for minimum expected energy overhead
-    per unit of useful work.
+    per unit of useful work — the closed-form *sanity oracle* for the
+    whole-run optimizer.
 
-    Per interval T (failure rate 1/mtbf, failure uniform within T):
-      checkpoint power overhead:  (T_ckpt/T) · P_ckpt            [J/s always]
+    Per interval T (cluster failure rate 1/mtbf, failure uniform within T),
+    both terms price the whole (n_survivors + 1)-node cluster:
+      checkpoint power overhead:  (n+1) · (T_ckpt/T) · P_ckpt    [J/s always]
       failure overhead rate:      (1/mtbf) · E[failure energy]   [J/s]
         where E[failure energy] = re-execution on the failed node
         (E[reexec]=T/2 at P_comp) + survivors' wait energy MINUS the paper's
         strategy savings (expected_savings above).
+    (The original derivation priced checkpoints for ONE node against
+    failure costs for the whole cluster, which biased the optimum ~2x
+    short of the renewal engine's; cross-checking against
+    ``core.optimize`` exposed the inconsistency.)
+
+    The whole (interval x failure-phase) grid is evaluated in ONE jitted
+    Algorithm-1 dispatch (``_expected_savings_grid``) — the former
+    per-interval Python loop paid 17 dispatches for identical numbers.
 
     Returns (best_interval_s, table) where table rows are dicts per interval
     — including the *no-strategy* optimum for comparison, which lands close
     to Young's sqrt(2·T_ckpt·mtbf) while the energy-aware optimum shifts
     longer (savings discount the failure cost).
+
+    Scope note (docs/optimize.md): this is a single-failure, fixed-workload
+    first-order model.  The renewal engine's optimizer
+    (``core.optimize.optimize_policy``) prices what this model cannot —
+    post-recovery resync checkpoints, rendezvous structure, non-Poisson
+    failure processes — and is the deployment answer; this heuristic is
+    kept as the transparent oracle it is cross-checked against
+    (tests/test_planning.py pins the two optima to within one grid step on
+    the paper's Table-4 profile in the regime where their assumptions
+    coincide).
     """
     pt = profile.power_table
     p_comp = float(pt.p_comp[0])
@@ -278,14 +343,17 @@ def optimal_checkpoint_interval(
     if intervals is None:
         young = np.sqrt(2.0 * t_ckpt_s * mtbf_s)
         intervals = young * np.geomspace(0.25, 4.0, 17)
+    intervals = np.asarray(intervals, np.float64)
 
+    expectations = _expected_savings_grid(
+        profile, intervals, t_down_s=t_down_s, t_restart_s=t_restart_s,
+        comp_to_block_s=comp_to_block_s, t_ckpt_s=t_ckpt_s,
+        wait_mode=wait_mode, grid=512)
     rows = []
-    for T in intervals:
-        exp = expected_savings(
-            profile, ckpt_interval_s=float(T), t_down_s=t_down_s,
-            t_restart_s=t_restart_s, comp_to_block_s=comp_to_block_s,
-            t_ckpt_s=t_ckpt_s, wait_mode=wait_mode)
-        ckpt_rate = (t_ckpt_s / T) * p_ckpt
+    for T, exp in zip(intervals, expectations):
+        # every node in the cluster checkpoints, so the steady-state
+        # checkpoint overhead is per-cluster — as the failure terms are
+        ckpt_rate = (n_survivors + 1) * (t_ckpt_s / T) * p_ckpt
         # failed node re-executes E[T/2] at full power
         reexec_e = (T / 2.0) * p_comp
         # survivors' no-intervention wait energy (reference) and savings

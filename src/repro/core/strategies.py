@@ -217,7 +217,12 @@ def evaluate_strategies_fold(
     this shape avoids.  Restrictions vs the vectorized form: per-level
     checkpoint counts are passed as ``n_ckpt_cols`` (a static sequence of F
     node-batch arrays), ``ref_level`` must be a concrete int, and there is
-    no mu-band axis (``mu1``/``mu2`` broadcast against the node batch).
+    no mu-band axis — ``mu1``/``mu2`` are *batchable leaves* that broadcast
+    against the node batch (scalars, or per-node arrays; the policy
+    optimizer vmaps this function over a leading policy axis whose lanes
+    carry different margins and wait modes).  They are cast to float32
+    here so a float64 caller (the x64-traced renewal scan) cannot promote
+    the Algorithm-1 energy math.
     """
     t_comp_fa, t_failed, wait_mode = jnp.broadcast_arrays(
         jnp.asarray(t_comp_fa, jnp.float32),
@@ -225,6 +230,8 @@ def evaluate_strategies_fold(
         jnp.asarray(wait_mode, jnp.int32),
     )
     t_ckpt = jnp.asarray(t_ckpt, jnp.float32)
+    mu1 = jnp.asarray(mu1, jnp.float32)
+    mu2 = jnp.asarray(mu2, jnp.float32)
     ref_level = int(ref_level)
     active = wait_mode == em.WaitMode.ACTIVE
     min_level = ladder.num_levels - 1

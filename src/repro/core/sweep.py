@@ -108,9 +108,11 @@ __all__ = [
     "renewal_failure_gaps",
     "renewal_compose",
     "renewal_compose_device",
+    "renewal_compose_policies",
     "renewal_monte_carlo_device",
     "renewal_monte_carlo",
     "renewal_monte_carlo_scenarios",
+    "renewal_monte_carlo_policies",
 ]
 
 SECONDS_PER_YEAR = 365.25 * 24 * 3600.0
@@ -1094,6 +1096,17 @@ def _renewal_device_core(inp: SweepInputs, gaps: jax.Array, makespan_s,
     return jax.vmap(over_runs, in_axes=(0, None, None))(inp, gaps, makespan_s)
 
 
+def _attach_failed_counts(out: dict, failed: jax.Array, n_nodes: int) -> dict:
+    """stats-mode epilogue shared by the scenario- and policy-stacked MC
+    cores: per-node failure counts over valid epochs, reduced over runs.
+    ``out['valid']`` is (S|P, R, K); the leading axis broadcasts the same
+    way for scenario and policy stacks."""
+    hit = out.pop("valid")[..., None] & (
+        failed[None, ..., None] == jnp.arange(n_nodes)[None, None, None])
+    out["failed_counts"] = jnp.sum(hit.astype(jnp.int32), axis=(1, 2))
+    return out
+
+
 def _renewal_mc_core(inp: SweepInputs, key: jax.Array, makespan_s, process,
                      n_runs: int, max_failures: int, stats: bool = False):
     """Fused Monte-Carlo entry: gap sampling (``renewal_failure_gaps``
@@ -1107,10 +1120,43 @@ def _renewal_mc_core(inp: SweepInputs, key: jax.Array, makespan_s, process,
     gaps = gaps32.astype(jnp.float64)
     out = _renewal_device_core(inp, gaps, makespan_s, stats=stats)
     if stats:
-        # per-node failure counts over valid epochs, reduced over runs
-        hit = out.pop("valid")[..., None] & (
-            failed[None, ..., None] == jnp.arange(n_nodes)[None, None, None])
-        out["failed_counts"] = jnp.sum(hit.astype(jnp.int32), axis=(1, 2))
+        out = _attach_failed_counts(out, failed, n_nodes)
+    return out, gaps, failed
+
+
+def _renewal_policy_core(inp: SweepInputs, gaps: jax.Array, makespan_s,
+                         stats: bool = False):
+    """The policy-axis analog of ``_renewal_device_core``: vmap the per-run
+    scan over runs and over a *policy-stacked* ``SweepInputs`` whose leading
+    axis varies the knobs (``interval``, ``mu1``, ``mu2``, ``wait_mode``,
+    ``move_frac``, ...) of ONE scenario, with a per-policy ``makespan_s``
+    (axis 0) so checkpoint intervals compare at equal useful *work* rather
+    than equal wall time (``core.optimize.wall_makespan``).  ``gaps`` stays
+    unbatched — every policy lane sees the *same* failure histories (common
+    random numbers), so cross-policy differences carry no sampling variance
+    and per-policy outputs are bit-identical to a standalone
+    ``_renewal_device_core`` call on that policy alone (tests/test_optimize.py
+    pins this)."""
+    scan = lambda i, g, m: _renewal_scan(i, g, m, stats=stats)
+    over_runs = jax.vmap(scan, in_axes=(None, 0, None))
+    return jax.vmap(over_runs, in_axes=(0, None, 0))(inp, gaps, makespan_s)
+
+
+def _renewal_policy_mc_core(inp: SweepInputs, key: jax.Array, makespan_s,
+                            process, n_runs: int, max_failures: int,
+                            stats: bool = False):
+    """Fused policy-grid Monte-Carlo: ONE gap-sampling pass (identical to
+    ``_renewal_mc_core``'s — same key, same draws) shared across every
+    policy lane, then the policy-vmapped composition.  This is the common-
+    random-numbers plumbing: the sampler never sees the policy axis, so the
+    histories cannot depend on the knobs being tuned."""
+    n_nodes = inp.period.shape[-1] + 1
+    gaps32, failed = failures.sample_renewal_gaps(
+        process, key, n_runs, max_failures, n_nodes)
+    gaps = gaps32.astype(jnp.float64)
+    out = _renewal_policy_core(inp, gaps, makespan_s, stats=stats)
+    if stats:
+        out = _attach_failed_counts(out, failed, n_nodes)
     return out, gaps, failed
 
 
@@ -1118,6 +1164,67 @@ _renewal_device_jit = jax.jit(
     _renewal_device_core, static_argnames=("stats",))
 _renewal_mc_jit = jax.jit(
     _renewal_mc_core, static_argnames=("n_runs", "max_failures", "stats"))
+_renewal_policy_jit = jax.jit(
+    _renewal_policy_core, static_argnames=("stats",))
+_renewal_policy_mc_jit = jax.jit(
+    _renewal_policy_mc_core, static_argnames=("n_runs", "max_failures", "stats"))
+
+
+def renewal_compose_policies(stacked: SweepInputs, gaps, makespan_s):
+    """Compose explicit failure histories for a policy-stacked scenario.
+
+    ``stacked`` is a policy-stacked float64 ``SweepInputs`` (leading policy
+    axis P over the knob leaves — build it with ``core.optimize.
+    policy_inputs``), ``makespan_s`` a (P,) per-policy wall makespan, and
+    ``gaps`` (R, K) or (K,) histories shared by every policy (CRN).  One
+    jitted dispatch; returns a ``RenewalDeviceResult`` whose leading axis is
+    the policy axis.
+    """
+    with enable_x64():
+        gaps = jnp.atleast_2d(jnp.asarray(np.asarray(gaps, np.float64)))
+        makespan = jnp.asarray(np.asarray(makespan_s, np.float64))
+        out = _renewal_policy_jit(stacked, gaps, makespan)
+        return _wrap_device_result(out, gaps, None)
+
+
+def renewal_monte_carlo_policies(
+    stacked: SweepInputs,
+    key: jax.Array,
+    *,
+    makespan_s,
+    n_runs: int = 256,
+    max_failures: int = 32,
+    mtbf_s: Optional[float] = None,
+    process: Optional[failures.FailureProcess] = None,
+    stats: bool = True,
+):
+    """Whole-run Monte-Carlo over a policy grid — one fused dispatch.
+
+    The policy analog of ``renewal_monte_carlo_device``: sampling (shared
+    across policies — common random numbers), the scan-over-epochs
+    composition for every policy lane, Algorithm 1, and the whole-run
+    reduction execute as one jitted program.  ``stacked`` is a
+    policy-stacked float64 ``SweepInputs`` (``core.optimize.policy_inputs``)
+    and ``makespan_s`` is per-policy, (P,).  For a fixed ``key`` each
+    policy's per-run energies are bit-identical to a standalone
+    ``renewal_monte_carlo_device`` call on that policy's config with that
+    policy's makespan — the property ``tests/test_optimize.py``
+    cross-validates and the optimizer's low-variance comparisons rest on.
+
+    ``stats=True`` (default — the optimizer's hot path) returns the lean
+    ``RenewalDeviceStats``; ``stats=False`` the full per-epoch
+    ``RenewalDeviceResult``.  Leading axis of every field is the policy
+    axis.
+    """
+    proc = failures.as_process(process, mtbf_s)
+    with enable_x64():
+        makespan = jnp.asarray(np.asarray(makespan_s, np.float64))
+        out, gaps, failed = _renewal_policy_mc_jit(
+            stacked, key, makespan, proc,
+            n_runs=n_runs, max_failures=max_failures, stats=stats)
+        if stats:
+            return _wrap_device_stats(out)
+        return _wrap_device_result(out, gaps, failed)
 
 
 def _check_renewal_config(cfg: ScenarioConfig) -> None:

@@ -1,0 +1,138 @@
+"""Characterization-table tests: PowerTable/SleepSpec/MachineProfile
+construction, validation, and the Scenario-3 ``scaled`` transform.
+
+test_energy_model.py covers the Table-3 values and ladder math; this file
+covers the characterization layer itself — the validation contracts in
+``__post_init__`` and the derived quantities profiles expose.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.characterization import (
+    MachineProfile,
+    PowerTable,
+    SleepSpec,
+    paper_machine_profile,
+    paper_power_table,
+    paper_sleep_spec,
+    tpu_v5e_like_profile,
+)
+
+
+# ---------------------------------------------------------------------------
+# PowerTable validation (__post_init__ contracts)
+# ---------------------------------------------------------------------------
+
+def test_power_table_shape_mismatch_rejected():
+    with pytest.raises(ValueError, match="shape"):
+        PowerTable(freq_ghz=[2.8, 1.2], p_comp=[166.0],
+                   beta=[1.0, 2.0], p_ckpt=[150.0, 125.0], gamma=[1.0, 1.4])
+
+
+def test_power_table_empty_rejected():
+    with pytest.raises(ValueError):
+        PowerTable(freq_ghz=[], p_comp=[], beta=[], p_ckpt=[], gamma=[])
+
+
+def test_power_table_gamma_at_fa_must_be_one():
+    with pytest.raises(ValueError, match="slowdowns"):
+        PowerTable(freq_ghz=[2.8, 1.2], p_comp=[166.0, 126.0],
+                   beta=[1.0, 2.0], p_ckpt=[150.0, 125.0], gamma=[1.2, 1.4])
+
+
+def test_power_table_coerces_to_float64():
+    pt = PowerTable(freq_ghz=[2.8, 1.2], p_comp=[166, 126],
+                    beta=[1, 2], p_ckpt=[150, 125], gamma=[1.0, 1.4])
+    for name in ("freq_ghz", "p_comp", "beta", "p_ckpt", "gamma"):
+        assert getattr(pt, name).dtype == np.float64
+    assert pt.num_levels == 2
+    assert pt.max_index == 0 and pt.min_index == 1
+
+
+def test_single_level_table_allowed():
+    pt = PowerTable(freq_ghz=[2.8], p_comp=[166.0], beta=[1.0],
+                    p_ckpt=[150.0], gamma=[1.0])
+    assert pt.num_levels == 1
+    assert pt.min_index == pt.max_index == 0
+
+
+# ---------------------------------------------------------------------------
+# PowerTable.scaled: the paper's Scenario-3 transform
+# ---------------------------------------------------------------------------
+
+def test_scaled_leaves_fa_row_untouched():
+    pt = paper_power_table()
+    mod = pt.scaled(p_comp_delta=-2.0, beta_delta=0.1)
+    assert mod.p_comp[0] == pt.p_comp[0]
+    assert mod.beta[0] == pt.beta[0] == 1.0
+    np.testing.assert_allclose(mod.p_comp[1:], pt.p_comp[1:] - 2.0)
+    np.testing.assert_allclose(mod.beta[1:], pt.beta[1:] + 0.1)
+    np.testing.assert_array_equal(mod.p_ckpt, pt.p_ckpt)
+    np.testing.assert_array_equal(mod.gamma, pt.gamma)
+
+
+def test_scaled_round_trip_and_purity():
+    pt = paper_power_table()
+    back = pt.scaled(p_comp_delta=-2.0, beta_delta=0.1).scaled(
+        p_comp_delta=2.0, beta_delta=-0.1)
+    np.testing.assert_allclose(back.p_comp, pt.p_comp)
+    np.testing.assert_allclose(back.beta, pt.beta)
+    # scaled() copies: the source table's arrays are untouched
+    np.testing.assert_allclose(pt.p_comp, [166.0, 148.0, 139.0, 126.0])
+    np.testing.assert_allclose(pt.beta, [1.0, 1.2, 1.5, 2.1])
+    # identity transform is a value-level no-op
+    same = pt.scaled()
+    np.testing.assert_array_equal(same.p_comp, pt.p_comp)
+
+
+def test_scaled_validation_still_applies():
+    # a beta_delta that breaks descending-energy sanity is allowed (values
+    # are free), but breaking the structural contracts is not: scaled()
+    # re-runs __post_init__ via dataclasses.replace
+    pt = PowerTable(freq_ghz=[2.8, 1.2], p_comp=[166.0, 126.0],
+                    beta=[1.0, 2.0], p_ckpt=[150.0, 125.0], gamma=[1.0, 1.4])
+    mod = pt.scaled(beta_delta=5.0)
+    assert mod.beta[1] == 7.0
+
+
+# ---------------------------------------------------------------------------
+# SleepSpec derived quantities
+# ---------------------------------------------------------------------------
+
+def test_sleep_spec_transition_quantities():
+    sl = SleepSpec(t_go_sleep=25.0, t_wakeup=5.0, p_go_sleep=51.0,
+                   p_wakeup=91.0, p_sleep=12.0)
+    assert sl.transition_time == 30.0
+    assert sl.transition_energy == 25.0 * 51.0 + 5.0 * 91.0 == 1730.0
+    # the paper's S3 numbers are exactly these
+    assert paper_sleep_spec() == sl
+
+
+def test_sleep_spec_zero_transition():
+    sl = SleepSpec(t_go_sleep=0.0, t_wakeup=0.0, p_go_sleep=0.0,
+                   p_wakeup=0.0, p_sleep=7.0)
+    assert sl.transition_time == 0.0
+    assert sl.transition_energy == 0.0
+
+
+# ---------------------------------------------------------------------------
+# MachineProfile
+# ---------------------------------------------------------------------------
+
+def test_machine_profiles_expose_active_wait_power():
+    prof = paper_machine_profile()
+    assert prof.active_wait_power(0) == 166.0
+    assert prof.active_wait_power(prof.power_table.min_index) == 126.0
+    assert prof.p_idle_wait == prof.p_base == 60.0
+    tpu = tpu_v5e_like_profile()
+    assert tpu.power_table.num_levels == 4
+    assert tpu.sleep.transition_time > paper_sleep_spec().transition_time
+
+
+def test_machine_profile_is_replaceable():
+    prof = paper_machine_profile()
+    mod = dataclasses.replace(prof, power_table=prof.power_table.scaled(-2.0, 0.1))
+    assert mod.power_table.p_comp[1] == 146.0
+    assert prof.power_table.p_comp[1] == 148.0

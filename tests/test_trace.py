@@ -1,0 +1,135 @@
+"""Trace-emission tests: the Paraver-like ``.prv`` serializer and the ASCII
+Gantt renderer (``repro.core.trace``) on a known simulator run.
+
+Golden values are derived from the scenario-4 event timeline (the run every
+other test suite cross-validates), so a format drift — header fields,
+record ordering, microsecond scaling, glyph assignments — fails loudly.
+"""
+import re
+
+import pytest
+
+from repro.core import trace
+from repro.core.scenarios import paper_scenarios
+from repro.core.simulator import Phase, simulate
+
+
+@pytest.fixture(scope="module")
+def result():
+    return simulate(paper_scenarios()["scenario4_short_active_waits"],
+                    intervene=True)
+
+
+# ---------------------------------------------------------------------------
+# to_prv: header + state records
+# ---------------------------------------------------------------------------
+
+def test_prv_header_format(result):
+    header = trace.to_prv(result).splitlines()[0]
+    n_nodes = 1 + max(s.node for s in result.segments)
+    horizon_us = int(max(s.t1 for s in result.segments) * 1e6)
+    m = re.fullmatch(
+        r"#Paraver \(repro:(?P<name>[^)]+)\):(?P<horizon>\d+)_us:"
+        r"1\(1\):(?P<nodes>\d+):(?P<threads>[\d,]+)", header)
+    assert m, header
+    assert m["name"] == result.config.name
+    assert int(m["horizon"]) == horizon_us
+    assert int(m["nodes"]) == n_nodes
+    assert m["threads"] == ",".join("1" for _ in range(n_nodes))
+
+
+def test_prv_records_golden(result):
+    lines = trace.to_prv(result).splitlines()
+    records = lines[1:]
+    assert len(records) == len(result.segments)
+    # record grammar: 1:cpu:appl:task:thread:begin:end:state, times in us
+    parsed = []
+    for rec in records:
+        fields = rec.split(":")
+        assert len(fields) == 8, rec
+        assert fields[0] == "1"
+        assert fields[2] == "1" and fields[4] == "1"
+        assert fields[1] == fields[3]            # cpu == task (1-based node)
+        t0, t1, state = int(fields[5]), int(fields[6]), int(fields[7])
+        assert 0 <= t0 <= t1
+        assert 1 <= state <= 10                  # the documented state codes
+        parsed.append((int(fields[1]), t0, t1, state))
+    # sorted by (node, begin) — Paraver wants per-task monotone records
+    assert parsed == sorted(parsed, key=lambda r: (r[0], r[1]))
+    # golden spot-checks against the event timeline: the failed node (task 1)
+    # opens DOWN at t=0 for t_down seconds, then RESTART
+    cfg = result.config
+    node1 = [r for r in parsed if r[0] == 1]
+    assert node1[0][1:] == (0, int(cfg.t_down * 1e6), 8)          # DOWN
+    assert node1[1][3] == 9                                       # RESTART
+    assert node1[1][2] - node1[1][1] == int(cfg.t_restart * 1e6)
+    # every phase present in the run maps to its documented state code
+    by_phase = {s.phase for s in result.segments}
+    assert Phase.EXEC in by_phase and Phase.DOWN in by_phase
+    state_of = {Phase.EXEC: 1, Phase.CKPT: 2, Phase.WAIT_ACTIVE: 3,
+                Phase.DOWN: 8, Phase.RESTART: 9, Phase.REEXEC: 10}
+    for seg in result.segments:
+        if seg.phase in state_of:
+            rec = (seg.node + 1, int(seg.t0 * 1e6), int(seg.t1 * 1e6),
+                   state_of[seg.phase])
+            assert rec in parsed, rec
+
+
+def test_prv_roundtrip_energy_consistency(result):
+    """Record durations cover the horizon per node: summed span == last end
+    (the simulator emits gap-free piecewise-constant segments)."""
+    lines = trace.to_prv(result).splitlines()[1:]
+    spans = {}
+    for rec in lines:
+        f = rec.split(":")
+        node, t0, t1 = int(f[1]), int(f[5]), int(f[6])
+        spans.setdefault(node, []).append((t0, t1))
+    for node, ss in spans.items():
+        ss.sort()
+        for (a0, a1), (b0, b1) in zip(ss, ss[1:]):
+            assert b0 == a1, f"gap in node {node} records"
+
+
+# ---------------------------------------------------------------------------
+# ascii_gantt: width, ordering, legend invariants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("width", [40, 100, 173])
+def test_gantt_row_width_and_order(result, width):
+    out = trace.ascii_gantt(result, width=width)
+    lines = out.splitlines()
+    nodes = sorted({s.node for s in result.segments})
+    assert len(lines) == len(nodes) + 2          # title + rows + legend
+    assert lines[0].startswith(result.config.name)
+    assert "intervened" in lines[0]
+    rows = lines[1:-1]
+    for node, row in zip(nodes, rows):
+        label = "P0*" if node == 0 else f"P{node} "
+        assert row.startswith(label + "|") and row.endswith("|")
+        assert len(row) == len(label) + 2 + width
+    assert lines[-1].lstrip().startswith("legend:")
+
+
+def test_gantt_glyphs_follow_timeline(result):
+    width = 120
+    out = trace.ascii_gantt(result, width=width).splitlines()
+    glyphs = set("=#w.>z<XRr ")
+    for row in out[1:-1]:
+        body = row.split("|")[1]
+        assert set(body) <= glyphs, set(body) - glyphs
+    # node 0 (failed) starts DOWN ('X') and node rows appear in node order
+    assert out[1].split("|")[1][0] == "X"
+    horizon = max(s.t1 for s in result.segments)
+    # the failed node re-executes: 'r' occupies the cells after down/restart
+    t_rec = result.config.t_down + result.config.t_restart
+    col = int((t_rec + result.config.t_reexec / 2) / horizon * (width - 1))
+    assert out[1].split("|")[1][col] == "r"
+
+
+def test_gantt_reference_run_labeled():
+    res = simulate(paper_scenarios()["scenario5_short_idle_waits"],
+                   intervene=False)
+    out = trace.ascii_gantt(res, width=60)
+    assert "reference" in out.splitlines()[0]
+    # idle waits render as '.' on some survivor row
+    assert any("." in row.split("|")[1] for row in out.splitlines()[1:-1])
