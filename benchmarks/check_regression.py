@@ -35,10 +35,13 @@ DEFAULT_BASELINE = pathlib.Path(__file__).parent / "artifacts"
 # rows the fresh set must carry regardless of hardware: the benchmarks
 # always emit them, so absence means the corresponding engine path broke
 # or was silently dropped (the per-process renewal row landed with
-# repro.core.failures; the policy-grid row with repro.core.optimize)
+# repro.core.failures; the policy-grid row with repro.core.optimize; the
+# controller-retune row with repro.ft.controller — its absence means the
+# online observe->fit->retune loop no longer completes)
 REQUIRED_ROW_PREFIXES = (
     "failure_sweep/renewal_weibull",
     "optimize_policy/grid_",
+    "ft/controller_retune",
 )
 
 # machine-independent ratio rows gated at THRESHOLD.  Only ratios whose

@@ -1,20 +1,70 @@
-"""FT substrate overheads: checkpoint save/restore latency and the
-end-to-end recovery path (restore + deterministic re-execution) on a small
-model — the framework-side analogues of the paper's T_ckpt / T_recover."""
+"""FT substrate overheads: checkpoint save/restore latency, the end-to-end
+recovery path (restore + deterministic re-execution) on a small model — the
+framework-side analogues of the paper's T_ckpt / T_recover — and the online
+controller's warm-started retune cost (the per-failure price of the
+observe -> fit -> retune loop in ft/controller.py).
+
+Run:  PYTHONPATH=src python -m benchmarks.ft_overhead [--json BENCH_ft_overhead.json]
+"""
 from __future__ import annotations
 
+import json
+import os
+import platform
+import sys
 import tempfile
 import time
+import types
 
 import jax
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointConfig, PodCheckpointManager
 from repro.configs import get_smoke_config
+from repro.core.failures import Weibull
 from repro.data.pipeline import SyntheticLM
+from repro.ft.controller import AdaptiveController
+from repro.ft.runtime import ClusterSpec
 from repro.launch.steps import make_train_step
 from repro.models import build_model
 from repro.optim.adamw import AdamWConfig, adamw
+
+
+def machine_fingerprint() -> str:
+    """Coarse machine id recorded next to the numbers (same convention as
+    benchmarks/failure_sweep.py): absolute timings are only comparable on
+    like hardware."""
+    return f"{platform.system()}-{platform.machine()}-cpu{os.cpu_count()}"
+
+
+def _retune_rows() -> list:
+    """Warm-started retune wall time: the steady-state per-failure cost once
+    the CEM evaluator is compiled (the first retune pays the jit compile,
+    reported in ``derived``)."""
+    ctl = AdaptiveController(Weibull.from_mtbf(0.7, 2000.0), n_pods=4,
+                             retune_every=1, cem_iters=2, cem_population=8,
+                             cem_n_runs=32, cem_max_failures=32, seed=0)
+    trainer = types.SimpleNamespace(
+        cluster=ClusterSpec(n_pods=4, step_time_s=100.0),
+        ckpt_duration_s=120.0)
+    rng = np.random.default_rng(0)
+    for g in rng.weibull(0.7, 6) * 2000.0:
+        ctl.observe_failure(gap_s=float(g), failed_pod=int(rng.integers(4)))
+
+    # cold: first retune compiles the CEM/grid evaluators
+    assert ctl.maybe_retune(trainer=trainer, remaining_work_s=6000.0,
+                            step=0) is not None
+    cold_s = ctl.retunes[0].wall_s
+    # warm: subsequent retunes resume the posterior on compiled evaluators
+    warm = []
+    for i in range(1, 4):
+        ctl.observe_failure(gap_s=float(rng.weibull(0.7) * 2000.0),
+                            failed_pod=int(rng.integers(4)))
+        ctl.maybe_retune(trainer=trainer, remaining_work_s=6000.0, step=i)
+        warm.append(ctl.retunes[-1].wall_s)
+    warm_s = float(np.median(warm))
+    return [{"name": "ft/controller_retune", "us_per_call": warm_s * 1e6,
+             "derived": f"{cold_s:.2f}s_cold"}]
 
 
 def run() -> list:
@@ -27,7 +77,11 @@ def run() -> list:
     pipe = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=32, global_batch=4)
     nbytes = sum(x.nbytes for x in jax.tree.leaves(state))
 
-    rows = []
+    rows = [{
+        "name": "meta/machine",
+        "us_per_call": 0.0,
+        "derived": machine_fingerprint(),
+    }]
     with tempfile.TemporaryDirectory() as d:
         mgr = PodCheckpointManager(
             CheckpointConfig(root=d, async_save=False), pod_id=0)
@@ -66,12 +120,25 @@ def run() -> list:
         rows.append({"name": "ft/ckpt_save_async_critical_path",
                      "us_per_call": async_s * 1e6,
                      "derived": f"{async_s / max(save_s, 1e-9):.3f}x_sync"})
+    rows.extend(_retune_rows())
     return rows
 
 
-def main():
-    for r in run():
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    json_path = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        if i + 1 >= len(argv):
+            sys.exit("usage: python -m benchmarks.ft_overhead [--json PATH]")
+        json_path = argv[i + 1]
+    rows = run()
+    for r in rows:
         print(f"{r['name']},{r['us_per_call']:.0f},{r['derived']}")
+    if json_path is not None:
+        with open(json_path, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"# wrote {json_path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

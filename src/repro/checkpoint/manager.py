@@ -61,6 +61,12 @@ class CheckpointConfig:
     # uncoordinated phase offsets: pod i first checkpoints at
     # interval * (1 + jitter_frac * frac(hash(i)))
     jitter_frac: float = 0.5
+    # explicit phase: every pod first checkpoints at step
+    # interval_steps - phase_offset_steps (jitter_frac is then ignored).
+    # The adaptive-controller reconciliation path uses 1, which puts the
+    # first save exactly interval_steps * step_time of execution after the
+    # renewal engine's age-0 start (docs/runtime.md).
+    phase_offset_steps: Optional[int] = None
 
 
 class PodCheckpointManager:
@@ -73,11 +79,26 @@ class PodCheckpointManager:
         self.dir.mkdir(parents=True, exist_ok=True)
         # deterministic pod phase (Python's hash() is per-process salted)
         import zlib
-        phase = (zlib.crc32(f"pod-{pod_id}".encode()) % 1000) / 1000.0
-        self._offset = int(cfg.interval_steps * cfg.jitter_frac * phase)
+        self._phase = (zlib.crc32(f"pod-{pod_id}".encode()) % 1000) / 1000.0
+        self._offset = self._phase_offset()
         self._pending: Optional[threading.Thread] = None
         self.saves = 0
         self.move_aheads = 0
+
+    def _phase_offset(self) -> int:
+        if self.cfg.phase_offset_steps is not None:
+            return int(self.cfg.phase_offset_steps)
+        return int(self.cfg.interval_steps * self.cfg.jitter_frac * self._phase)
+
+    def set_interval_steps(self, interval_steps: int) -> None:
+        """Re-cadence a live manager (the adaptive controller's policy
+        push).  Takes effect at the next ``due`` check: the anchor stays the
+        latest saved step, so the next checkpoint fires ``interval_steps``
+        after it under the new interval."""
+        if interval_steps < 1:
+            raise ValueError(f"interval_steps must be >= 1, got {interval_steps}")
+        self.cfg = dataclasses.replace(self.cfg, interval_steps=int(interval_steps))
+        self._offset = self._phase_offset()
 
     # --- cadence -----------------------------------------------------------
 

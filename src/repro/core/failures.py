@@ -592,7 +592,7 @@ def ks_critical(n: int, alpha: float = 1e-3) -> float:
     return math.sqrt(-0.5 * math.log(alpha / 2.0)) / math.sqrt(n)
 
 
-def fit_weibull(gaps, iters: int = 200) -> tuple:
+def fit_weibull(gaps, iters: int = 200, censored=None) -> tuple:
     """Maximum-likelihood Weibull fit of a gap sample: ``(k, scale_s)``.
 
     The profile-likelihood fixed point in the shape,
@@ -603,21 +603,37 @@ def fit_weibull(gaps, iters: int = 200) -> tuple:
     for complete (uncensored) failure logs; see docs/failures.md for usage
     on a real log (and for why equal-MTBF comparisons should re-scale via
     ``Weibull.from_mtbf`` afterwards).
+
+    ``censored`` (optional) are Type-I right-censored observations: ages of
+    nodes that have *not yet* failed (an online fitter mid-run sees one per
+    surviving clock).  They contribute survival mass only, extending the
+    fixed point to
+
+        1/k  =  sum_all(t^k ln t) / sum_all(t^k)  -  mean(ln x_complete)
+        scale^k  =  sum_all(t^k) / n_complete
+
+    where the ``all`` sums run over complete AND censored observations.
+    With ``censored=None`` (or empty) both reduce to the complete-sample
+    formulas above, bit for bit.  Non-positive censored entries are
+    dropped (a zero age carries no information).
     """
     x = np.asarray(gaps, np.float64).ravel()
     if x.size < 2 or np.any(x <= 0.0):
         raise ValueError("need >= 2 positive gaps to fit")
-    lx = np.log(x)
-    ml = lx.mean()
+    c = np.asarray([] if censored is None else censored, np.float64).ravel()
+    c = c[c > 0.0]
+    t = np.concatenate([x, c])          # every observation carries t^k mass
+    lt = np.log(t)
+    ml = np.log(x).mean()               # only complete gaps carry ln-density
     k = 1.0
     for _ in range(iters):
-        xk = x ** k
-        k_new = 1.0 / (np.sum(xk * lx) / np.sum(xk) - ml)
+        tk = t ** k
+        k_new = 1.0 / (np.sum(tk * lt) / np.sum(tk) - ml)
         if not np.isfinite(k_new) or k_new <= 0.0:
             break
         if abs(k_new - k) < 1e-12:
             k = k_new
             break
         k = k_new
-    scale = float(np.mean(x ** k) ** (1.0 / k))
+    scale = float((np.sum(t ** k) / x.size) ** (1.0 / k))
     return float(k), scale

@@ -486,6 +486,7 @@ def cem_refine(
     mtbf_s: Optional[float] = None,
     process: Optional[failures.FailureProcess] = None,
     seed: int = 0,
+    warm: Optional["CEMResult"] = None,
 ) -> CEMResult:
     """Cross-entropy refinement of the continuous knobs around a seed.
 
@@ -501,6 +502,16 @@ def cem_refine(
     exponential ``smoothing``.  Score = ``mean_energy_j + makespan_weight *
     mean_makespan_s`` (pure energy by default).  Monotone: the reported
     best never regresses across iterations.
+
+    ``warm`` (optional) resumes the Gaussian from a previous ``CEMResult``:
+    the sampling mean/std start at the last iteration's posterior (clipped
+    to the current bounds, std floored at 2 % of each box so the search
+    keeps exploring) instead of ``init``/``init_std_frac``.  This is the
+    online-controller path (ft/controller.py): successive retunes under a
+    drifting fitted process each pay one or two iterations instead of
+    re-converging from scratch.  The incumbent re-injection still uses
+    ``init`` — warm starting narrows the proposal, never the guarantee
+    that the result scores no worse than ``init`` under CRN.
     """
     missing = [k for k in bounds if k not in CEM_KNOBS]
     if missing:
@@ -521,6 +532,13 @@ def cem_refine(
     knobs = tuple(k for k in CEM_KNOBS if k in bounds)
     mean = {k: float(init[k]) for k in knobs}
     std = {k: init_std_frac * (bounds[k][1] - bounds[k][0]) for k in knobs}
+    if warm is not None and warm.iterations:
+        prev = warm.iterations[-1]
+        for k in knobs:
+            if k in prev["mean"]:
+                lo, hi = bounds[k]
+                mean[k] = float(np.clip(prev["mean"][k], lo, hi))
+                std[k] = max(float(prev["std"][k]), 0.02 * (hi - lo))
     rng = np.random.default_rng(seed)
     eval_kw = dict(work_s=work_s, makespan_s=makespan_s, n_runs=n_runs,
                    max_failures=max_failures, mtbf_s=mtbf_s, process=process)

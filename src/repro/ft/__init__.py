@@ -1,0 +1,30 @@
+"""FT runtime: energy-aware trainer + online adaptive controller."""
+from repro.ft.controller import (
+    AdaptiveController,
+    ReconcileReport,
+    RetuneRecord,
+    StochasticFailureInjector,
+    cluster_scenario,
+    reconcile_ledger,
+)
+from repro.ft.runtime import (
+    ClusterSpec,
+    EnergyEvent,
+    EnergyManager,
+    FailureInjector,
+    FTTrainer,
+)
+
+__all__ = [
+    "AdaptiveController",
+    "ReconcileReport",
+    "RetuneRecord",
+    "StochasticFailureInjector",
+    "cluster_scenario",
+    "reconcile_ledger",
+    "ClusterSpec",
+    "EnergyEvent",
+    "EnergyManager",
+    "FailureInjector",
+    "FTTrainer",
+]

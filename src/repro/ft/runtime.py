@@ -31,7 +31,7 @@ import numpy as np
 
 from repro.checkpoint.manager import CheckpointConfig, PodCheckpointManager
 from repro.core import energy_model as em
-from repro.core import strategies
+from repro.core import planning, strategies
 from repro.core.characterization import MachineProfile, paper_machine_profile
 
 __all__ = ["ClusterSpec", "FailureInjector", "EnergyManager", "EnergyEvent",
@@ -48,6 +48,14 @@ class ClusterSpec:
     wait_mode: em.WaitMode = em.WaitMode.ACTIVE
     mu1: float = 6.0
     mu2: float = 1.0
+    # checkpoint policy knobs mirrored from the live cadence: FTTrainer
+    # keeps ckpt_interval_s synced to the managers' interval_steps *
+    # step_time_s so the move-ahead predictor prices the actual cadence
+    # (it was hardcoded to 3600 s before), and the adaptive controller
+    # retunes all three at runtime (ft/controller.py).
+    ckpt_interval_s: float = 3600.0
+    move_ahead: bool = True
+    move_ahead_frac: float = 0.5
 
 
 class FailureInjector:
@@ -56,6 +64,18 @@ class FailureInjector:
 
     def check(self, step: int) -> Optional[int]:
         return self.schedule.get(step)
+
+    def poll(self, step: int, balanced_since_anchor_s: float,
+             step_time_s: float) -> Optional[int]:
+        """Failure check at the pre-step boundary.  The base injector keys
+        on the step index alone; stochastic injectors (ft/controller.py)
+        key on the balanced wall clock instead."""
+        del balanced_since_anchor_s, step_time_s
+        return self.check(step)
+
+    def confirm(self, step: int) -> None:
+        """The trainer handled the failure just polled at ``step``."""
+        self.schedule.pop(step, None)
 
 
 @dataclasses.dataclass
@@ -70,6 +90,17 @@ class EnergyEvent:
     reference_j: float
     saving_pct: float
     intervention_s: float
+    # renewal-epoch accounting (failure events only; stragglers leave 0):
+    # the epoch's total energy under the chosen interventions / under the
+    # no-intervention reference, in the renewal engine's own decomposition
+    # (survivor windows + trailing fa spans to T_E + the failed node) —
+    # docs/runtime.md.  gap_s is the balanced wall time since the previous
+    # renewal anchor; progress_frac the survivor fractions the decision saw.
+    epoch_int_j: float = 0.0
+    epoch_ref_j: float = 0.0
+    gap_s: float = 0.0
+    t_e_s: float = 0.0
+    progress_frac: tuple = ()
 
 
 class EnergyManager:
@@ -78,30 +109,92 @@ class EnergyManager:
     def __init__(self, cluster: ClusterSpec):
         self.cluster = cluster
         self.events: List[EnergyEvent] = []
+        # steady-state ledger (docs/runtime.md): balanced step compute,
+        # timer-checkpoint writes, post-recovery resync checkpoints.  Epoch
+        # (failure-window) energy lives on the events; the total realized
+        # run energy is ledger_total_j().
+        self.steps_j = 0.0
+        self.ckpt_j = 0.0
+        self.resync_j = 0.0
+
+    # --- steady-state ledger ------------------------------------------------
+
+    def note_steps(self, n: int = 1) -> None:
+        """n synchronous steps: every pod computes at the reference level."""
+        c = self.cluster
+        p_comp0 = float(c.profile.power_table.p_comp[0])
+        self.steps_j += n * c.n_pods * c.step_time_s * p_comp0
+
+    def note_checkpoints(self, n_saved: int, ckpt_duration_s: float) -> None:
+        """n_saved timer-checkpoint writes at the reference level."""
+        p_ckpt0 = float(self.cluster.profile.power_table.p_ckpt[0])
+        self.ckpt_j += n_saved * ckpt_duration_s * p_ckpt0
+
+    def note_resync(self, ckpt_duration_s: float) -> None:
+        """Coordinated post-recovery resync: all pods write one checkpoint
+        (the renewal engine's ``n_nodes * dur_fa * p_ckpt0`` term)."""
+        pt = self.cluster.profile.power_table
+        dur_fa = ckpt_duration_s * float(pt.gamma[0])
+        self.resync_j += self.cluster.n_pods * dur_fa * float(pt.p_ckpt[0])
+
+    def ledger_total_j(self) -> float:
+        """Realized whole-run energy under the chosen interventions —
+        directly comparable to ``renewal_compose(...).energy_int``."""
+        return self.steps_j + self.ckpt_j + self.resync_j + sum(
+            e.epoch_int_j for e in self.events)
+
+    def ledger_reference_j(self) -> float:
+        """Same run without interventions (``energy_ref`` analog)."""
+        return self.steps_j + self.ckpt_j + self.resync_j + sum(
+            e.epoch_ref_j for e in self.events)
 
     def on_failure(self, *, step: int, failed_pod: int, reexec_steps: int,
                    ckpt_ages_s: np.ndarray, ckpt_duration_s: float,
-                   progress_frac: np.ndarray) -> EnergyEvent:
+                   progress_frac: np.ndarray, gap_s: float = 0.0) -> EnergyEvent:
         """Run Algorithm 1 for every surviving pod.
 
         progress_frac[i]: fraction of the current step pod i still has to
         execute before blocking on the failed pod's collective (the alpha of
-        paper eq. 14); ckpt_ages_s feeds the move-ahead predictor.
+        paper eq. 14); ckpt_ages_s feeds the move-ahead predictor, which
+        prices the *actual* cadence (cluster.ckpt_interval_s — previously a
+        hardcoded 3600 s) through the shared ``planning.checkpoint_plan``.
         """
         c = self.cluster
+        pt = c.profile.power_table
+        p_comp0, p_ckpt0 = float(pt.p_comp[0]), float(pt.p_ckpt[0])
+        beta0, gamma0 = float(pt.beta[0]), float(pt.gamma[0])
         survivors = [p for p in range(c.n_pods) if p != failed_pod]
         t_comp = np.array([progress_frac[p] * c.step_time_s for p in survivors])
         t_recover = c.t_down_s + c.t_restart_s + reexec_steps * c.step_time_s
         t_failed = t_recover + t_comp                           # eq (14)/(15)
-        interval = 3600.0
-        ages = np.array([ckpt_ages_s[p] for p in survivors])
-        move = (ages + t_comp) > 0.5 * interval
-        move &= (t_failed - t_comp) > ckpt_duration_s
-        n_ckpt = move.astype(np.float64)
+        interval = float(c.ckpt_interval_s)
+        ages = np.array([ckpt_ages_s[p] for p in survivors], np.float64)
+
+        plan = planning.checkpoint_plan(
+            t_comp, ages, t_failed, interval=interval, dur=ckpt_duration_s,
+            beta=pt.beta, gamma=pt.gamma, move_ahead=c.move_ahead,
+            move_frac=c.move_ahead_frac)
+        move = np.asarray(plan.plan_move)
+        n_ckpt = np.asarray(plan.n_ckpt)                        # (n, levels)
 
         d = strategies.evaluate_strategies_profile(
             c.profile, t_comp, t_failed, n_ckpt, ckpt_duration_s,
-            np.full(len(survivors), int(c.wait_mode)), mu1=c.mu1, mu2=c.mu2)
+            np.full(len(survivors), int(c.wait_mode)), mu1=c.mu1, mu2=c.mu2,
+            per_level_n_ckpt=True)
+
+        # renewal-epoch accounting, mirroring sweep.renewal_compose: each
+        # survivor's window energy plus the trailing reference-level span to
+        # the renewal point T_E, plus the failed node over [failure, T_E].
+        p_star = float(np.max(t_comp))
+        t_e = t_recover + p_star
+        epoch_failed = c.t_restart_s * p_ckpt0 \
+            + (reexec_steps * c.step_time_s + p_star) * p_comp0
+        ct_ref = t_comp * beta0 + n_ckpt[:, 0] * ckpt_duration_s * gamma0
+        eni = np.asarray(d.energy_reference, np.float64)
+        ei = np.asarray(d.energy_intervened, np.float64)
+        ct_sel = np.asarray(d.comp_time, np.float64)
+        trail_ref = np.maximum(t_e - np.maximum(t_failed, ct_ref), 0.0) * p_comp0
+        trail_int = np.maximum(t_e - np.maximum(t_failed, ct_sel), 0.0) * p_comp0
 
         decisions = {}
         for i, pod in enumerate(survivors):
@@ -124,6 +217,11 @@ class EnergyManager:
             reference_j=reference,
             saving_pct=100.0 * saving / max(reference, 1e-9),
             intervention_s=float(np.max(t_failed)),
+            epoch_int_j=float(np.sum(ei + trail_int) + epoch_failed),
+            epoch_ref_j=float(np.sum(eni + trail_ref) + epoch_failed),
+            gap_s=float(gap_s),
+            t_e_s=float(t_e),
+            progress_frac=tuple(float(progress_frac[p]) for p in survivors),
         )
         self.events.append(event)
         return event
@@ -204,21 +302,37 @@ class FTTrainer:
 
     def __init__(self, *, step_fn: Callable, pipeline, state, cluster: ClusterSpec,
                  ckpt_cfg: CheckpointConfig, injector: FailureInjector,
-                 ckpt_duration_s: float = 120.0, rng: int = 0):
+                 ckpt_duration_s: float = 120.0, rng: int = 0,
+                 controller=None, resync_on_recovery: bool = True,
+                 progress_mode: str = "boundary"):
+        if progress_mode not in ("boundary", "keyed"):
+            raise ValueError(f"unknown progress_mode {progress_mode!r}")
         self.step_fn = step_fn
         self.pipeline = pipeline
         self.state = state              # (params, opt_state)
-        self.cluster = cluster
+        # keep the move-ahead predictor's interval synced to the actual
+        # checkpoint cadence (satellite of the hardcoded-3600 fix)
+        self.cluster = dataclasses.replace(
+            cluster,
+            ckpt_interval_s=ckpt_cfg.interval_steps * cluster.step_time_s)
         self.injector = injector
-        self.energy = EnergyManager(cluster)
+        self.energy = EnergyManager(self.cluster)
         self.ckpt_duration_s = ckpt_duration_s
         self.managers = [PodCheckpointManager(ckpt_cfg, p)
                          for p in range(cluster.n_pods)]
+        self.controller = controller
+        self.resync_on_recovery = resync_on_recovery
+        self.progress_mode = progress_mode
+        self._seed = rng
         self.rng = np.random.default_rng(rng)
         self._initial_state = jax.tree.map(lambda x: x, state)
         self.history: List[dict] = []
         self.events: List[dict] = []
         self._sim_ckpt_age = np.zeros(cluster.n_pods)   # seconds, simulated
+        # balanced wall clock (work + checkpoint writes): total, and since
+        # the last renewal anchor — the realized inter-failure gap
+        self.sim_balanced_s = 0.0
+        self._bal_since_anchor = 0.0
 
     def _advance(self, step: int):
         batch = self.pipeline.batch_at(step)
@@ -227,27 +341,87 @@ class FTTrainer:
         self.state = (params, opt_state)
         return metrics
 
+    def _progress_at(self, step: int) -> np.ndarray:
+        """Survivor progress fractions at a failure boundary — a pure
+        function of (seed, step) so replaying the same injector schedule
+        reproduces the ledger bit-for-bit.  'boundary' pins every pod at a
+        full step of remaining execution (the renewal engine's synchronous
+        rendezvous geometry); 'keyed' draws from a per-step keyed stream,
+        recorded in the event."""
+        if self.progress_mode == "boundary":
+            return np.ones(self.cluster.n_pods)
+        return np.random.default_rng((self._seed, step)).uniform(
+            0.0, 1.0, self.cluster.n_pods)
+
     def run(self, num_steps: int, start_step: int = 0) -> List[dict]:
         step = start_step
-        while step < start_step + num_steps:
-            failed = self.injector.check(step)
-            if failed is not None:
-                self._handle_failure(step, failed)
-                self.injector.schedule.pop(step, None)
+        end_step = start_step + num_steps
+        while step < end_step:
+            # pre-step boundary: drain every failure due now (a stochastic
+            # injector may fire again immediately after recovery)
+            while True:
+                failed = self.injector.poll(step, self._bal_since_anchor,
+                                            self.cluster.step_time_s)
+                if failed is None:
+                    break
+                self._handle_failure(step, failed, end_step=end_step)
+                self.injector.confirm(step)
             metrics = self._advance(step)
             self.history.append({"step": step,
                                  "loss": float(metrics["total_loss"])})
+            # clocks advance before the cadence check so a pod saving at
+            # this boundary enters the next step at age 0 (the renewal
+            # engine's sawtooth phase)
+            dt = self.cluster.step_time_s
+            self._sim_ckpt_age += dt
+            self.sim_balanced_s += dt
+            self._bal_since_anchor += dt
+            self.energy.note_steps(1)
             # uncoordinated pod-local checkpoints
+            n_saved = 0
             for pod, mgr in enumerate(self.managers):
                 if mgr.maybe_save(step, self.state):
                     self._sim_ckpt_age[pod] = 0.0
-            self._sim_ckpt_age += self.cluster.step_time_s
+                    n_saved += 1
+            if n_saved:
+                self.energy.note_checkpoints(n_saved, self.ckpt_duration_s)
+                # synchronized cadences write concurrently: the balanced
+                # wall advances one checkpoint duration
+                self.sim_balanced_s += self.ckpt_duration_s
+                self._bal_since_anchor += self.ckpt_duration_s
             step += 1
         for mgr in self.managers:
             mgr.wait()
         return self.history
 
-    def _handle_failure(self, step: int, failed_pod: int):
+    def _apply_policy(self, policy: dict) -> dict:
+        """Push a retuned policy into the live cluster spec and checkpoint
+        cadences.  The continuous interval snaps to whole steps (>= 1) and
+        the spec mirrors the snapped value so predictor and cadence agree."""
+        dt = self.cluster.step_time_s
+        interval_steps = max(1, int(round(float(policy["ckpt_interval"]) / dt)))
+        self.cluster = dataclasses.replace(
+            self.cluster,
+            ckpt_interval_s=interval_steps * dt,
+            mu1=float(policy.get("mu1", self.cluster.mu1)),
+            mu2=float(policy.get("mu2", self.cluster.mu2)),
+            move_ahead_frac=float(policy.get("move_ahead_frac",
+                                             self.cluster.move_ahead_frac)),
+            wait_mode=em.WaitMode(int(policy.get("wait_mode",
+                                                 int(self.cluster.wait_mode)))),
+        )
+        self.energy.cluster = self.cluster
+        for mgr in self.managers:
+            mgr.set_interval_steps(interval_steps)
+        return {"interval_steps": interval_steps,
+                "ckpt_interval_s": self.cluster.ckpt_interval_s,
+                "mu1": self.cluster.mu1, "mu2": self.cluster.mu2,
+                "move_ahead_frac": self.cluster.move_ahead_frac,
+                "wait_mode": int(self.cluster.wait_mode)}
+
+    def _handle_failure(self, step: int, failed_pod: int,
+                        end_step: Optional[int] = None):
+        gap_s = self._bal_since_anchor
         mgr = self.managers[failed_pod]
         ckpt_step = mgr.latest_step()
         if ckpt_step is None:
@@ -260,15 +434,20 @@ class FTTrainer:
         reexec = step - 1 - ckpt_step
 
         # survivors: energy strategy decisions (paper Algorithm 1)
-        progress = self.rng.uniform(0.0, 1.0, self.cluster.n_pods)
+        progress = self._progress_at(step)
         event = self.energy.on_failure(
             step=step, failed_pod=failed_pod, reexec_steps=reexec,
             ckpt_ages_s=self._sim_ckpt_age, ckpt_duration_s=self.ckpt_duration_s,
-            progress_frac=progress)
-        # move-ahead checkpoints for survivors that chose one
+            progress_frac=progress, gap_s=gap_s)
+        # move-ahead checkpoints for survivors that chose one: the live
+        # state is the post-step state of step-1, so that's the label (a
+        # later rollback must never see a checkpoint "from the future");
+        # its energy is part of the epoch window (Algorithm 1), not ckpt_j.
         for pod, d in event.decisions.items():
-            if d["move_ahead_ckpt"]:
-                self.managers[pod].save(step, self.state, move_ahead=True)
+            if d["move_ahead_ckpt"] and step >= 1:
+                if self.managers[pod].latest_step() != step - 1:
+                    self.managers[pod].save(step - 1, self.state,
+                                            move_ahead=True)
                 self._sim_ckpt_age[pod] = 0.0
 
         # localized rollback: ONLY the failed pod's state rolls back; in
@@ -278,13 +457,37 @@ class FTTrainer:
         self.state = restored
         for s in range(ckpt_step + 1, step):
             self._advance(s)
+
+        # coordinated re-synchronization checkpoint (the renewal engine's
+        # re-anchor: every clock back to zero, epoch gap restarts)
+        if self.resync_on_recovery:
+            if step >= 1:
+                for pod, m in enumerate(self.managers):
+                    if m.latest_step() != step - 1:
+                        m.save(step - 1, self.state)
+            self._sim_ckpt_age[:] = 0.0
+            self._bal_since_anchor = 0.0
+            self.energy.note_resync(self.ckpt_duration_s)
+
+        applied = None
+        if self.controller is not None:
+            self.controller.observe_failure(gap_s=gap_s, failed_pod=failed_pod)
+            remaining_work_s = None if end_step is None else \
+                (end_step - step) * self.cluster.step_time_s
+            policy = self.controller.maybe_retune(
+                trainer=self, remaining_work_s=remaining_work_s, step=step)
+            if policy is not None:
+                applied = self._apply_policy(policy)
+
         self.events.append({
             "kind": "failure",
             "step": step,
             "pod": failed_pod,
             "rollback_to": ckpt_step,
             "reexec_steps": reexec,
+            "gap_s": gap_s,
             "saving_j": event.saving_j,
             "saving_pct": event.saving_pct,
             "decisions": event.decisions,
+            "policy": applied,
         })

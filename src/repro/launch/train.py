@@ -36,6 +36,17 @@ def main():
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--production-lower", action="store_true")
     ap.add_argument("--shape", default="train_4k")
+    # online adaptive mode: stochastic failures + observe->fit->retune loop
+    ap.add_argument("--adaptive", action="store_true",
+                    help="draw failures from a Weibull process and run the "
+                         "online adaptive energy controller")
+    ap.add_argument("--mtbf", type=float, default=2000.0,
+                    help="per-node MTBF seconds for --adaptive")
+    ap.add_argument("--weibull-k", type=float, default=0.7)
+    ap.add_argument("--step-time", type=float, default=100.0,
+                    help="simulated step wall seconds for --adaptive")
+    ap.add_argument("--failure-key", type=int, default=3)
+    ap.add_argument("--retune-every", type=int, default=2)
     args = ap.parse_args()
 
     if args.production_lower:
@@ -64,16 +75,32 @@ def main():
     step_fn = jax.jit(make_train_step(model, opt))
     pipe = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
                        global_batch=args.batch)
-    schedule = {}
-    if args.fail_at is not None:
-        schedule[args.fail_at] = args.fail_pod
     ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="repro_ckpt_")
+    if args.adaptive:
+        from repro.core.failures import Weibull
+        from repro.ft.controller import (AdaptiveController,
+                                         StochasticFailureInjector)
+        process = Weibull.from_mtbf(args.weibull_k, args.mtbf)
+        injector = StochasticFailureInjector(
+            process, jax.random.PRNGKey(args.failure_key), n_pods=args.pods)
+        controller = AdaptiveController(
+            process, n_pods=args.pods, retune_every=args.retune_every)
+        cluster = ClusterSpec(n_pods=args.pods, step_time_s=args.step_time)
+        ckpt_cfg = CheckpointConfig(root=ckpt_dir,
+                                    interval_steps=args.ckpt_every,
+                                    phase_offset_steps=1)
+    else:
+        schedule = {}
+        if args.fail_at is not None:
+            schedule[args.fail_at] = args.fail_pod
+        injector = FailureInjector(schedule)
+        controller = None
+        cluster = ClusterSpec(n_pods=args.pods)
+        ckpt_cfg = CheckpointConfig(root=ckpt_dir,
+                                    interval_steps=args.ckpt_every)
     trainer = FTTrainer(
-        step_fn=step_fn, pipeline=pipe, state=state,
-        cluster=ClusterSpec(n_pods=args.pods),
-        ckpt_cfg=CheckpointConfig(root=ckpt_dir,
-                                  interval_steps=args.ckpt_every),
-        injector=FailureInjector(schedule))
+        step_fn=step_fn, pipeline=pipe, state=state, cluster=cluster,
+        ckpt_cfg=ckpt_cfg, injector=injector, controller=controller)
     hist = trainer.run(args.steps)
     print(f"{args.arch}: {len(hist)} steps, "
           f"loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}, "
@@ -81,6 +108,16 @@ def main():
     for ev in trainer.events:
         print(f"  failure@{ev['step']} pod{ev['pod']}: saved "
               f"{ev['saving_j'] / 1e3:.1f} kJ ({ev['saving_pct']:.1f}%)")
+    if controller is not None:
+        print(f"ledger: {trainer.energy.ledger_total_j() / 1e6:.3f} MJ over "
+              f"{trainer.sim_balanced_s:.0f} balanced s, "
+              f"{len(trainer.events)} failures")
+        for r in controller.retunes:
+            print(f"  retune@{r.step} ({r.n_observed} gaps, "
+                  f"{r.process_label}): interval "
+                  f"{r.policy['ckpt_interval']:.0f}s mu1 "
+                  f"{r.policy['mu1']:.1f} wait {r.policy['wait_mode']} "
+                  f"[{r.wall_s:.2f}s]")
 
 
 if __name__ == "__main__":

@@ -262,6 +262,51 @@ def test_fit_weibull_recovers_parameters():
         F.fit_weibull([1.0, -2.0])
 
 
+def test_fit_weibull_censored_reduces_to_complete():
+    """Empty / zero censoring is bit-identical to the complete-sample fit
+    (documented reduction — the online fitter with no open clocks)."""
+    gaps = np.asarray(F.Weibull.from_mtbf(1.4, MTBF).sample(
+        jax.random.PRNGKey(8), (50,)))
+    base = F.fit_weibull(gaps)
+    assert F.fit_weibull(gaps, censored=None) == base
+    assert F.fit_weibull(gaps, censored=[]) == base
+    assert F.fit_weibull(gaps, censored=[0.0, -5.0]) == base
+
+
+def test_fit_weibull_short_censored_sequence():
+    """The online controller's regime: a handful of complete lifetimes plus
+    right-censored open clock ages.  The censored MLE must stay in a sane
+    band around the truth where the complete-only fit is biased low in
+    scale (it treats survivors as failures at their current age)."""
+    true = F.Weibull.from_mtbf(0.7, MTBF)
+    key = jax.random.PRNGKey(12)
+    draws = np.asarray(true.sample(key, (10,)))
+    cutoff = float(np.median(draws))            # Type-I censor at the median
+    complete = draws[draws <= cutoff]
+    censored = np.full((draws > cutoff).sum(), cutoff)
+    assert complete.size >= 3 and censored.size >= 3
+    k_c, scale_c = F.fit_weibull(complete, censored=censored)
+    assert 0.2 < k_c < 2.5
+    # censoring adds survival mass: the fitted scale must exceed the
+    # complete-only fit's, which can't see beyond the cutoff
+    _, scale_naive = F.fit_weibull(complete)
+    assert scale_c > scale_naive
+
+
+def test_fit_weibull_convergence_with_sample_size():
+    """Property: more observed gaps -> tighter estimate, at a fixed key
+    (the controller's estimate improves as the run accumulates failures)."""
+    true = F.Weibull.from_mtbf(0.7, MTBF)
+    all_gaps = np.asarray(true.sample(jax.random.PRNGKey(21), (4000,)))
+    err = {}
+    for n in (12, 4000):
+        k, scale = F.fit_weibull(all_gaps[:n])
+        err[n] = abs(k - 0.7) / 0.7 + \
+            abs(scale - float(true.scale_s)) / float(true.scale_s)
+    assert err[4000] < err[12]
+    assert err[4000] < 0.1
+
+
 def test_as_process_and_validation():
     assert isinstance(F.as_process(None, MTBF), F.Exponential)
     w = F.Weibull.from_mtbf(0.7, MTBF)

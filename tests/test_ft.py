@@ -133,6 +133,122 @@ def test_failure_recovery_is_deterministic(tmp_path, small_setup):
         np.testing.assert_allclose(h["loss"], ref_losses[h["step"]], rtol=1e-4)
 
 
+def test_move_ahead_decision_tracks_cadence():
+    """Satellite regression: the move-ahead predictor prices the *actual*
+    checkpoint cadence (ClusterSpec.ckpt_interval_s), not a hardcoded
+    3600 s — the same ages flip the decision when the cadence halves."""
+    kw = dict(step=10, failed_pod=0, reexec_steps=5,
+              ckpt_ages_s=np.full(4, 1000.0), ckpt_duration_s=120.0,
+              progress_frac=np.full(4, 0.5))
+    slow = EnergyManager(ClusterSpec(n_pods=4, step_time_s=10.0))
+    fast = EnergyManager(ClusterSpec(n_pods=4, step_time_s=10.0,
+                                     ckpt_interval_s=1800.0))
+    moves_slow = [d["move_ahead_ckpt"]
+                  for d in slow.on_failure(**kw).decisions.values()]
+    moves_fast = [d["move_ahead_ckpt"]
+                  for d in fast.on_failure(**kw).decisions.values()]
+    # age 1000 + 5 s of progress: past half of an 1800 s cadence, nowhere
+    # near half of the default 3600 s one
+    assert not any(moves_slow)
+    assert all(moves_fast)
+
+
+def test_trainer_syncs_predictor_interval_to_cadence(tmp_path, small_setup):
+    _, _, step_fn, state0, pipe = small_setup
+    tr = FTTrainer(step_fn=step_fn, pipeline=pipe, state=state0,
+                   cluster=ClusterSpec(n_pods=3, step_time_s=10.0),
+                   ckpt_cfg=CheckpointConfig(root=str(tmp_path),
+                                             interval_steps=4),
+                   injector=FailureInjector({}))
+    assert tr.cluster.ckpt_interval_s == 40.0
+    assert tr.energy.cluster.ckpt_interval_s == 40.0
+
+
+def test_ledger_replay_is_bit_for_bit(tmp_path, small_setup):
+    """Satellite regression: survivor progress comes from a keyed stream
+    (pure function of seed and step), so replaying the same injector
+    schedule reproduces the energy ledger exactly — and a run with two
+    failures still converges to the failure-free state."""
+    _, _, step_fn, state0, pipe = small_setup
+
+    def make(root):
+        return FTTrainer(step_fn=step_fn, pipeline=pipe, state=state0,
+                         cluster=ClusterSpec(n_pods=3, step_time_s=10.0),
+                         ckpt_cfg=CheckpointConfig(root=str(root),
+                                                   interval_steps=4,
+                                                   async_save=False),
+                         injector=FailureInjector({5: 1, 9: 2}),
+                         progress_mode="keyed", rng=7)
+
+    a = make(tmp_path / "a")
+    a.run(12)
+    b = make(tmp_path / "b")
+    b.run(12)
+    assert len(a.events) == 2           # multiple failures in one run
+    assert a.energy.ledger_total_j() == b.energy.ledger_total_j()
+    ea, eb = a.energy.events, b.energy.events
+    assert [e.progress_frac for e in ea] == [e.progress_frac for e in eb]
+    assert [e.saving_j for e in ea] == [e.saving_j for e in eb]
+    assert all(0.0 <= p <= 1.0 for e in ea for p in e.progress_frac)
+    assert len(ea[0].progress_frac) == 2    # one entry per survivor
+
+    ref = FTTrainer(step_fn=step_fn, pipeline=pipe, state=state0,
+                    cluster=ClusterSpec(n_pods=3, step_time_s=10.0),
+                    ckpt_cfg=CheckpointConfig(root=str(tmp_path / "c"),
+                                              interval_steps=4,
+                                              async_save=False),
+                    injector=FailureInjector({}))
+    ref.run(12)
+    for x, y in zip(jax.tree.leaves(ref.state), jax.tree.leaves(a.state)):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32), atol=1e-5)
+
+
+def test_cold_restart_rolls_back_to_initial(tmp_path, small_setup):
+    """Failure before any checkpoint exists: rollback_to == -1 and the
+    whole prefix re-executes from the initial state."""
+    _, _, step_fn, state0, pipe = small_setup
+    tr = FTTrainer(step_fn=step_fn, pipeline=pipe, state=state0,
+                   cluster=ClusterSpec(n_pods=3, step_time_s=10.0),
+                   ckpt_cfg=CheckpointConfig(root=str(tmp_path),
+                                             interval_steps=50,
+                                             async_save=False),
+                   injector=FailureInjector({2: 1}))
+    tr.run(4)
+    ev = tr.events[0]
+    assert ev["rollback_to"] == -1
+    assert ev["reexec_steps"] == 2
+    assert [h["step"] for h in tr.history] == [0, 1, 2, 3]
+
+
+def test_move_ahead_checkpoint_resets_sim_age(tmp_path, small_setup):
+    """A survivor that chooses a move-ahead checkpoint restarts its
+    simulated checkpoint clock and snapshots the live (post step-1) state;
+    the failed pod's clock is untouched (resync disabled to isolate)."""
+    _, _, step_fn, state0, pipe = small_setup
+    tr = FTTrainer(step_fn=step_fn, pipeline=pipe, state=state0,
+                   cluster=ClusterSpec(n_pods=3, step_time_s=10.0),
+                   ckpt_cfg=CheckpointConfig(root=str(tmp_path),
+                                             interval_steps=10,
+                                             async_save=False,
+                                             phase_offset_steps=1),
+                   injector=FailureInjector({9: 0}),
+                   resync_on_recovery=False)
+    tr.run(10)
+    ev = tr.energy.events[0]
+    assert all(d["move_ahead_ckpt"] for d in ev.decisions.values())
+    for pod in ev.decisions:
+        assert tr.managers[pod].move_aheads == 1
+        assert tr.managers[pod].latest_step() == 8
+    # survivors' clocks restarted at the failure boundary, then aged by the
+    # post-recovery step; the failed pod took no move-ahead (its own timer
+    # fired at step 9 as scheduled)
+    for pod in ev.decisions:
+        assert tr._sim_ckpt_age[pod] == 10.0
+    assert tr.managers[0].move_aheads == 0
+    assert tr.managers[0].latest_step() == 9
+
+
 def test_energy_manager_decisions_scale_with_reexec(small_setup):
     cluster = ClusterSpec(n_pods=4, step_time_s=10.0)
     mgr = EnergyManager(cluster)
@@ -163,7 +279,7 @@ def test_straggler_mitigation_uses_wait_strategies():
 # ---------------------------------------------------------------------------
 
 def test_elastic_shrink_plan():
-    with pytest.raises(Exception):
+    with pytest.raises(ValueError, match="1-pod"):
         ElasticPlan.shrink(jax.make_mesh((1,), ("pod",)))
     plan = ElasticPlan(old_axes={"pod": 2, "data": 1}, new_axes={"pod": 1, "data": 1})
     assert plan.new_axes["pod"] == 1

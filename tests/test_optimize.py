@@ -316,6 +316,36 @@ def test_cem_refine_monotone_deterministic_and_no_worse_than_seed():
                      bounds={"wait_mode": (0, 1)}, **kw)
 
 
+def test_cem_refine_warm_start_resumes_posterior():
+    """Warm-started retunes (the online controller's path) resume the
+    Gaussian from the previous posterior: the search stays narrowed, the
+    no-worse-than-init guarantee holds, and chaining from a previous best
+    never regresses under CRN."""
+    cfg = _long_period_cfg()
+    kw = dict(work_s=1 * 24 * 3600.0, n_runs=48, max_failures=48,
+              mtbf_s=8 * 3600.0)
+    tab = O.policy_grid(ckpt_interval=[3600.0, 7200.0])
+    seed_policy = O.evaluate_policy_grid(cfg, tab, KEY, **kw).policy(0)
+    bounds = {"ckpt_interval": (2400.0, 12000.0)}
+    cold = O.cem_refine(cfg, KEY, init=seed_policy, bounds=bounds,
+                        n_iters=2, population=8, seed=3, **kw)
+    warm = O.cem_refine(cfg, KEY, init=cold.best, bounds=bounds,
+                        n_iters=1, population=8, seed=3, warm=cold, **kw)
+    # chained refinement never regresses (same key: CRN-paired scores)
+    assert warm.best["mean_energy_j"] <= cold.best["mean_energy_j"]
+    # the warm proposal resumed from the cold posterior, floored at 2 % of
+    # the box — not re-widened to init_std_frac of the box
+    lo, hi = bounds["ckpt_interval"]
+    cold_std = cold.iterations[-1]["std"]["ckpt_interval"]
+    resumed_std = max(cold_std, 0.02 * (hi - lo))
+    assert resumed_std < 0.25 * (hi - lo)
+    # deterministic: warm-started call replays identically
+    again = O.cem_refine(cfg, KEY, init=cold.best, bounds=bounds,
+                         n_iters=1, population=8, seed=3, warm=cold, **kw)
+    assert again.best == warm.best
+    assert again.iterations == warm.iterations
+
+
 # ---------------------------------------------------------------------------
 # the operator entry point + process dependence
 # ---------------------------------------------------------------------------
