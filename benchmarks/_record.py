@@ -1,0 +1,69 @@
+"""The shared benchmark record format.
+
+Every benchmark emits rows of the same shape —
+
+    {"name": "<bench>/<row>", "us_per_call": float,
+     "decisions_per_s": float, "derived": str, ...extra domain fields}
+
+— prefixed with a ``meta/machine`` fingerprint row, printed as
+``name,us_per_call,derived`` CSV, and optionally dumped with ``--json``
+so ``benchmarks.check_regression`` can gate them.  This module is that
+contract's single definition; all ``benchmarks/*.py`` scripts route
+through it.
+"""
+from __future__ import annotations
+
+import json
+import os
+import platform
+import sys
+
+
+def machine_fingerprint() -> str:
+    """Coarse machine id recorded next to the numbers: absolute timings
+    are only comparable on like hardware (check_regression gates on it)."""
+    return f"{platform.system()}-{platform.machine()}-cpu{os.cpu_count()}"
+
+
+def meta_row() -> dict:
+    return {"name": "meta/machine", "us_per_call": 0.0,
+            "decisions_per_s": 0.0, "derived": machine_fingerprint()}
+
+
+def row(name: str, us_per_call: float = 0.0, decisions_per_s: float = 0.0,
+        derived: str = "", **extra) -> dict:
+    return {"name": name, "us_per_call": float(us_per_call),
+            "decisions_per_s": float(decisions_per_s),
+            "derived": str(derived), **extra}
+
+
+def print_rows(rows) -> None:
+    for r in rows:
+        print(f"{r['name']},{r.get('us_per_call', 0.0):.1f},"
+              f"{r.get('derived', '')}")
+
+
+def write_json(rows, path) -> None:
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"# wrote {path}", file=sys.stderr)
+
+
+def parse_json_arg(argv, usage: str):
+    """Extract ``--json PATH`` from ``argv``; returns (rest, path|None)."""
+    argv = list(argv)
+    path = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        if i + 1 >= len(argv):
+            sys.exit(usage)
+        path = argv[i + 1]
+        argv = argv[:i] + argv[i + 2:]
+    return argv, path
+
+
+def emit(rows, json_path=None) -> None:
+    """Print the CSV view and optionally write the JSON record."""
+    print_rows(rows)
+    if json_path is not None:
+        write_json(rows, json_path)

@@ -1,0 +1,136 @@
+"""Campaign-runner benchmark: cells/s through the chunked dispatch path.
+
+The campaign engine's contract is that declaring an experiment matrix and
+running it through ``repro.campaign.runner`` costs (almost) nothing over
+hand-rolling the fused dispatch yourself.  This benchmark prices that
+claim on the same 42-policy grid ``benchmarks.optimize_policy`` times:
+
+  * ``cells``    — ``runner.run_campaign`` over ``presets.policy_grid()``
+    (store=None, warm compile caches): cells/s and renewal decisions/s,
+    spec resolution + grouping + chunking + scatter included;
+  * ``overhead_vs_direct`` — the decisions/s ratio against a direct
+    ``optimize.evaluate_policy_grid`` call on the identical workload,
+    timed interleaved.  The acceptance bar is < 1.15x (the runner loses
+    < 15% decisions/s to its bookkeeping);
+  * ``resume_skip`` — a second ``run_campaign`` against a store that
+    already holds every cell: the pure content-address lookup path, i.e.
+    what resuming a finished campaign costs.
+
+``benchmarks/check_regression.py`` gates the cells row's *presence* on
+every run (prefix ``campaign/cells``); absolute numbers gate on like
+hardware only.
+
+Run:  PYTHONPATH=src python -m benchmarks.campaign [--json PATH] [--store DIR]
+"""
+from __future__ import annotations
+
+import statistics
+import sys
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.campaign import presets, runner, store as store_mod
+from repro.core import optimize
+from benchmarks._record import emit, meta_row, parse_json_arg
+from benchmarks.optimize_policy import (
+    MAX_FAILURES, MTBF_H, N_RUNS, WORK_D, benchmark_config, benchmark_table)
+
+REPS = 5
+
+
+def throughput(reps: int = REPS) -> dict:
+    """Interleaved median timings: campaign runner vs direct fused grid."""
+    spec = presets.policy_grid()
+    cfg = benchmark_config()
+    table = benchmark_table()
+    key = jax.random.PRNGKey(1)
+
+    def campaign():
+        return runner.run_campaign(spec)
+
+    def direct():
+        res = optimize.evaluate_policy_grid(
+            cfg, table, key, work_s=WORK_D * 24 * 3600.0, n_runs=N_RUNS,
+            max_failures=MAX_FAILURES, mtbf_s=MTBF_H * 3600.0)
+        jax.block_until_ready(res.energy_int)
+        return res
+
+    report = campaign()     # warm both paths (compile + input caches)
+    direct()
+    t_camp, t_dir = [], []
+    for _ in range(reps):
+        t0 = time.perf_counter(); campaign(); t_camp.append(time.perf_counter() - t0)
+        t0 = time.perf_counter(); direct(); t_dir.append(time.perf_counter() - t0)
+    t_camp = statistics.median(t_camp)
+    t_dir = statistics.median(t_dir)
+
+    n_cells = report.n_total
+    n_decisions = report.decisions
+    # resume path: every cell already stored -> zero dispatches
+    with tempfile.TemporaryDirectory() as d:
+        st = store_mod.ResultStore(d)
+        runner.run_campaign(spec, st)
+        t0 = time.perf_counter()
+        skip_report = runner.run_campaign(spec, st)
+        t_skip = time.perf_counter() - t0
+    assert skip_report.n_computed == 0 and skip_report.n_skipped == n_cells
+
+    return {
+        "n_cells": n_cells,
+        "campaign_s": t_camp,
+        "direct_s": t_dir,
+        "skip_s": t_skip,
+        "cells_per_s": n_cells / t_camp,
+        "decisions_per_s": n_decisions / t_camp,
+        "direct_decisions_per_s": n_decisions / t_dir,
+        "overhead": t_camp / t_dir,
+    }
+
+
+def run() -> list:
+    thr = throughput()
+    cfg = benchmark_config()
+    shape = (f"{thr['n_cells']}x{N_RUNS}x{MAX_FAILURES}"
+             f"x{len(cfg.survivors)}")
+    return [meta_row(), {
+        "name": f"campaign/cells_{shape}",
+        "us_per_call": thr["campaign_s"] * 1e6,
+        "decisions_per_s": thr["decisions_per_s"],
+        "derived": f"{thr['cells_per_s']:.1f}cells/s_chunked_dispatch",
+    }, {
+        "name": "campaign/overhead_vs_direct",
+        "us_per_call": 0.0,
+        "decisions_per_s": thr["direct_decisions_per_s"],
+        "derived": f"{thr['overhead']:.3f}x_direct_fused_grid",
+    }, {
+        "name": f"campaign/resume_skip_{thr['n_cells']}cells",
+        "us_per_call": thr["skip_s"] * 1e6,
+        "decisions_per_s": 0.0,
+        "derived": f"{thr['n_cells'] / thr['skip_s']:.0f}cells/s_skipped",
+    }]
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    argv, json_path = parse_json_arg(
+        argv, "usage: python -m benchmarks.campaign [--json PATH] "
+              "[--store DIR]")
+    store_dir = None
+    if "--store" in argv:
+        i = argv.index("--store")
+        if i + 1 >= len(argv):
+            sys.exit("usage: python -m benchmarks.campaign [--json PATH] "
+                     "[--store DIR]")
+        store_dir = argv[i + 1]
+    rows = run()
+    emit(rows, json_path)
+    if store_dir is not None:
+        store_mod.ResultStore(store_dir).put_bench_rows(rows)
+        print(f"# wrote bench rows to store {store_dir}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -19,8 +19,12 @@ artifacts regardless, so the per-machine trajectory accumulates.
 
 Usage:  python -m benchmarks.check_regression FRESH [FRESH...] [--baseline PATH]
 
-``--baseline`` overrides the default (a ``BENCH_*.json`` file, or a
-directory of them).  Exit codes: 0 ok / skipped (no baseline), 1 regression.
+A FRESH argument (or ``--baseline``) may also be a campaign result-store
+root (``repro.campaign.store`` layout): its ``bench.json`` rows — written
+by ``python -m benchmarks.campaign --store DIR`` — are read as the record.
+``--baseline`` otherwise overrides the default (a ``BENCH_*.json`` file,
+or a directory of them).  Exit codes: 0 ok / skipped (no baseline),
+1 regression.
 """
 from __future__ import annotations
 
@@ -42,6 +46,9 @@ REQUIRED_ROW_PREFIXES = (
     "failure_sweep/renewal_weibull",
     "optimize_policy/grid_",
     "ft/controller_retune",
+    # the chunked campaign-runner path (repro.campaign.runner) — its
+    # absence means the declarative matrix engine no longer dispatches
+    "campaign/cells",
 )
 
 # machine-independent ratio rows gated at THRESHOLD.  Only ratios whose
@@ -55,6 +62,11 @@ SPEEDUP_ROWS = (
 
 
 def _load_rows(path: pathlib.Path) -> dict:
+    # a campaign result-store root carries its rows in bench.json (same
+    # record format, written by `benchmarks.campaign --store`); kept
+    # stdlib-only so the gate never needs PYTHONPATH=src
+    if path.is_dir() and (path / "bench.json").exists():
+        path = path / "bench.json"
     return {r["name"]: r for r in json.loads(path.read_text())}
 
 
@@ -82,6 +94,8 @@ def _merge(paths, *, reject_collisions: bool = False) -> dict:
 
 def _baseline_paths(base: pathlib.Path) -> list:
     if base.is_dir():
+        if (base / "bench.json").exists():     # campaign store as baseline
+            return [base]
         return sorted(base.glob("BENCH_*.json"))
     return [base] if base.exists() else []
 

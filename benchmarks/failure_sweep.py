@@ -34,8 +34,6 @@ from the default run to keep CI fast.
 """
 from __future__ import annotations
 
-import json
-import platform
 import statistics
 import sys
 import time
@@ -43,34 +41,33 @@ import time
 import jax
 import numpy as np
 
+from repro.campaign import presets, runner
 from repro.core import failures, sweep
 from repro.core.scenarios import paper_scenarios
+from benchmarks._record import (
+    emit, machine_fingerprint, meta_row, parse_json_arg,
+)
 
 N_OFFSETS = 4096
 HORIZON_S = 7200.0          # two checkpoint intervals of failure-time diversity
 JITTER_S = 0.318            # keeps the grid off exact checkpoint boundaries
 MTBF_DAYS = 30.0
 
-# renewal mode: whole-run composition over repeated failures
-RENEWAL_RUNS = 256
-RENEWAL_MAX_FAILURES = 32
-RENEWAL_MAKESPAN_D = 30.0
-RENEWAL_MTBF_D = 7.0        # per-node MTBF
+# renewal mode: whole-run composition over repeated failures — the shape
+# constants live with the campaign preset (repro.campaign.presets) so the
+# benchmark and the declarative matrix stay one definition
+RENEWAL_RUNS = presets.RENEWAL_RUNS
+RENEWAL_MAX_FAILURES = presets.RENEWAL_MAX_FAILURES
+RENEWAL_MAKESPAN_D = presets.RENEWAL_MAKESPAN_D
+RENEWAL_MTBF_D = presets.RENEWAL_MTBF_D           # per-node MTBF
 RENEWAL_REPS = 7            # interleaved timing repetitions (median)
-RENEWAL_WEIBULL_K = 0.7     # per-process row: infant-mortality Weibull at
+RENEWAL_WEIBULL_K = presets.RENEWAL_WEIBULL_K
+                            # per-process row: infant-mortality Weibull at
                             # the same per-node MTBF as the exponential rows
 
 # --full scaling shape: one device dispatch
 FULL_RUNS = 4096
 FULL_MAX_FAILURES = 64
-
-
-def machine_fingerprint() -> str:
-    """Coarse machine id recorded next to the numbers: decisions/s are only
-    comparable on like hardware (benchmarks/check_regression.py gates on
-    this)."""
-    import os
-    return f"{platform.system()}-{platform.machine()}-cpu{os.cpu_count()}"
 
 
 def grid_offsets(n_offsets: int = N_OFFSETS) -> np.ndarray:
@@ -81,7 +78,7 @@ def grid_offsets(n_offsets: int = N_OFFSETS) -> np.ndarray:
 def scenario_stats(n_offsets: int = N_OFFSETS, mtbf_days: float = MTBF_DAYS) -> dict:
     """name -> (SweepSummary, MonteCarloSummary) for the six Table-4
     scenarios on the canonical grid.  Single definition of the experiment —
-    benchmarks/run.py rows and benchmarks/report.py tables both read this."""
+    this benchmark's rows and benchmarks/report.py tables both read this."""
     cfgs = paper_scenarios()
     res = sweep.sweep_scenarios(list(cfgs.values()), grid_offsets(n_offsets))
     out = {}
@@ -99,12 +96,14 @@ def renewal_stats(
     makespan_d: float = RENEWAL_MAKESPAN_D,
     mtbf_d: float = RENEWAL_MTBF_D,
 ) -> dict:
-    """name -> RenewalMonteCarloSummary for the six Table-4 scenarios —
-    one fused device dispatch (same program the throughput rows time)."""
-    return sweep.renewal_monte_carlo_scenarios(
-        list(paper_scenarios().values()), jax.random.PRNGKey(0),
-        n_runs=n_runs, makespan_s=makespan_d * 24 * 3600.0,
-        mtbf_s=mtbf_d * 24 * 3600.0, max_failures=max_failures)
+    """scenario name -> renewal result dict for the six Table-4 scenarios,
+    via the campaign runner (one fused dispatch for the whole matrix —
+    same per-lane numbers as ``sweep.renewal_monte_carlo_scenarios``, which
+    tests/test_campaign.py pins bit-identically)."""
+    spec = presets.table4_renewal(n_runs=n_runs, max_failures=max_failures,
+                                  makespan_d=makespan_d, mtbf_d=mtbf_d)
+    report = runner.run_campaign(spec)
+    return {r["labels"]["scenario"]: r["result"] for r in report.records}
 
 
 def _median_time(fn, reps: int) -> float:
@@ -260,12 +259,7 @@ def run(full: bool = False) -> list:
     cfg_list = list(paper_scenarios().values())
     offsets = grid_offsets()
 
-    rows = [{
-        "name": "meta/machine",
-        "us_per_call": 0.0,
-        "decisions_per_s": 0.0,
-        "derived": machine_fingerprint(),
-    }]
+    rows = [meta_row()]
 
     # one jitted dispatch for the full (scenario x failure-time x node) grid
     res = sweep.sweep_scenarios(cfg_list, offsets)
@@ -367,10 +361,10 @@ def run(full: bool = False) -> list:
             "us_per_call": 0.0,
             "decisions_per_s": 0.0,
             "derived": (
-                f"run_save={mc.mean_saving_j / 3.6e6:.2f}kWh"
-                f"_pct={mc.mean_saving_pct:.2f}"
-                f"_failures={mc.mean_failures:.1f}"
-                f"_trunc={mc.truncated_rate:.2f}"
+                f"run_save={mc['mean_saving_j'] / 3.6e6:.2f}kWh"
+                f"_pct={mc['mean_saving_pct']:.2f}"
+                f"_failures={mc['mean_failures']:.1f}"
+                f"_trunc={mc['truncated_rate']:.2f}"
             ),
         })
     return rows
@@ -378,19 +372,9 @@ def run(full: bool = False) -> list:
 
 def main(argv=None):
     argv = sys.argv[1:] if argv is None else argv
-    json_path = None
-    if "--json" in argv:
-        i = argv.index("--json")
-        if i + 1 >= len(argv):
-            sys.exit("usage: python -m benchmarks.failure_sweep [--json PATH] [--full]")
-        json_path = argv[i + 1]
-    rows = run(full="--full" in argv)
-    for r in rows:
-        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
-    if json_path is not None:
-        with open(json_path, "w") as f:
-            json.dump(rows, f, indent=1)
-        print(f"# wrote {json_path}", file=sys.stderr)
+    argv, json_path = parse_json_arg(
+        argv, "usage: python -m benchmarks.failure_sweep [--json PATH] [--full]")
+    emit(run(full="--full" in argv), json_path)
 
 
 if __name__ == "__main__":

@@ -8,9 +8,6 @@ Run:  PYTHONPATH=src python -m benchmarks.ft_overhead [--json BENCH_ft_overhead.
 """
 from __future__ import annotations
 
-import json
-import os
-import platform
 import sys
 import tempfile
 import time
@@ -18,6 +15,8 @@ import types
 
 import jax
 import numpy as np
+
+from benchmarks._record import emit, meta_row, parse_json_arg
 
 from repro.checkpoint.manager import CheckpointConfig, PodCheckpointManager
 from repro.configs import get_smoke_config
@@ -28,13 +27,6 @@ from repro.ft.runtime import ClusterSpec
 from repro.launch.steps import make_train_step
 from repro.models import build_model
 from repro.optim.adamw import AdamWConfig, adamw
-
-
-def machine_fingerprint() -> str:
-    """Coarse machine id recorded next to the numbers (same convention as
-    benchmarks/failure_sweep.py): absolute timings are only comparable on
-    like hardware."""
-    return f"{platform.system()}-{platform.machine()}-cpu{os.cpu_count()}"
 
 
 def _retune_rows() -> list:
@@ -77,11 +69,7 @@ def run() -> list:
     pipe = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=32, global_batch=4)
     nbytes = sum(x.nbytes for x in jax.tree.leaves(state))
 
-    rows = [{
-        "name": "meta/machine",
-        "us_per_call": 0.0,
-        "derived": machine_fingerprint(),
-    }]
+    rows = [meta_row()]
     with tempfile.TemporaryDirectory() as d:
         mgr = PodCheckpointManager(
             CheckpointConfig(root=d, async_save=False), pod_id=0)
@@ -126,19 +114,9 @@ def run() -> list:
 
 def main(argv=None):
     argv = sys.argv[1:] if argv is None else argv
-    json_path = None
-    if "--json" in argv:
-        i = argv.index("--json")
-        if i + 1 >= len(argv):
-            sys.exit("usage: python -m benchmarks.ft_overhead [--json PATH]")
-        json_path = argv[i + 1]
-    rows = run()
-    for r in rows:
-        print(f"{r['name']},{r['us_per_call']:.0f},{r['derived']}")
-    if json_path is not None:
-        with open(json_path, "w") as f:
-            json.dump(rows, f, indent=1)
-        print(f"# wrote {json_path}", file=sys.stderr)
+    argv, json_path = parse_json_arg(
+        argv, "usage: python -m benchmarks.ft_overhead [--json PATH]")
+    emit(run(), json_path)
 
 
 if __name__ == "__main__":

@@ -67,12 +67,15 @@ def main():
     from repro.launch.dryrun import run_cell
     from repro.launch.mesh import make_production_mesh
 
+    from benchmarks._record import machine_fingerprint
+
     arch, shape = args.cell.split(":")
     mesh = make_production_mesh()
     rec = run_cell(arch, shape, mesh, "single",
                    extra_overrides=dict(CHANGES[args.change]))
     t = terms(rec)
-    out = {"cell": args.cell, "change": args.change, **t,
+    out = {"cell": args.cell, "change": args.change,
+           "machine": machine_fingerprint(), **t,
            "flops": rec["flops"], "compile_s": rec["compile_s"]}
     print(json.dumps(out, indent=1))
 

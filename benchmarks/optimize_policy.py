@@ -29,7 +29,6 @@ Run:  PYTHONPATH=src python -m benchmarks.optimize_policy [--json PATH]
 """
 from __future__ import annotations
 
-import json
 import statistics
 import sys
 import time
@@ -37,10 +36,11 @@ import time
 import jax
 import numpy as np
 
+from repro.campaign import presets, runner
 from repro.core import energy_model as em
-from repro.core import failures, optimize, sweep
+from repro.core import optimize, sweep
 from repro.core.scenarios import apply_policy, sparse_rendezvous_scenario
-from benchmarks.failure_sweep import machine_fingerprint
+from benchmarks._record import emit, meta_row, parse_json_arg
 
 # the benchmark workload: scenario 4's machine on the sparser-rendezvous
 # application of docs/optimize.md (the paper's 3600 s period pins the
@@ -121,14 +121,8 @@ def throughput(reps: int = REPS) -> dict:
 
 def run() -> list:
     thr = throughput()
-    res = thr["result"]
     shape = f"{thr['n_policies']}x{N_RUNS}x{MAX_FAILURES}x3"
-    rows = [{
-        "name": "meta/machine",
-        "us_per_call": 0.0,
-        "decisions_per_s": 0.0,
-        "derived": machine_fingerprint(),
-    }, {
+    rows = [meta_row(), {
         "name": f"optimize_policy/grid_{shape}",
         "us_per_call": thr["grid_s"] * 1e6,
         "decisions_per_s": thr["decisions_per_s"],
@@ -145,36 +139,40 @@ def run() -> list:
         "derived": f"{thr['speedup']:.1f}x_batched_vs_sequential",
     }]
 
-    front = optimize.pareto_front(res.mean_energy_j, res.mean_makespan_s)
-    knee = res.policy(optimize.knee_point(
-        res.mean_energy_j, res.mean_makespan_s, front))
-    best = res.policy(res.best)
+    # the optimum + frontier view, from campaign records: the same grid as
+    # the timing rows, declared once as presets.policy_grid (cell order ==
+    # optimize.policy_grid row order) and dispatched through the campaign
+    # runner — per-lane numbers bit-identical to evaluate_policy_grid's by
+    # the CRN contract (tests/test_campaign.py pins this)
+    grid_recs = runner.run_campaign(presets.policy_grid()).records
+    energy = np.array([r["result"]["mean_energy_int_j"] for r in grid_recs])
+    makespan = np.array([r["result"]["mean_makespan_s"] for r in grid_recs])
+    front = optimize.pareto_front(energy, makespan)
+    knee = grid_recs[optimize.knee_point(energy, makespan, front)]
+    best = grid_recs[int(np.argmin(energy))]
+    policy = lambda rec: rec["config"]["policy"]
     rows.append({
-        "name": f"optimize_policy/optimum_{res.scenario}",
+        "name": f"optimize_policy/optimum_{benchmark_config().name}",
         "us_per_call": 0.0,
         "decisions_per_s": 0.0,
         "derived": (
-            f"best_T={best['ckpt_interval']:.0f}s"
-            f"_wait={em.WaitMode(best['wait_mode']).name.lower()}"
-            f"_knee_T={knee['ckpt_interval']:.0f}s"
+            f"best_T={policy(best)['ckpt_interval']:.0f}s"
+            f"_wait={em.WaitMode(policy(best)['wait_mode']).name.lower()}"
+            f"_knee_T={policy(knee)['ckpt_interval']:.0f}s"
             f"_front={front.size}"
         ),
     })
 
     # process dependence, one line: the exp-vs-Weibull(0.7) optimum shift
-    # at equal MTBF that docs/optimize.md documents
-    key = jax.random.PRNGKey(1)
-    table = optimize.policy_grid(
-        ckpt_interval=np.geomspace(2400.0, 19200.0, GRID_INTERVALS))
-    kw = dict(work_s=WORK_D * 24 * 3600.0, n_runs=N_RUNS,
-              max_failures=MAX_FAILURES)
-    cfg = benchmark_config()
-    mtbf = MTBF_H * 3600.0
+    # at equal MTBF that docs/optimize.md documents — an interval-only
+    # campaign with a process axis, best interval per process group
+    shift_recs = runner.run_campaign(presets.process_shift()).records
     opt = {}
-    for name, proc in (("exp", failures.Exponential(mtbf)),
-                       ("wb07", failures.Weibull.from_mtbf(0.7, mtbf))):
-        r = optimize.evaluate_policy_grid(cfg, table, key, process=proc, **kw)
-        opt[name] = float(table.ckpt_interval[r.best])
+    for proc_label in ("exp", "wb07"):
+        group = [r for r in shift_recs
+                 if r["labels"]["process"] == proc_label]
+        best_rec = min(group, key=lambda r: r["result"]["mean_energy_int_j"])
+        opt[proc_label] = best_rec["config"]["policy"]["ckpt_interval"]
     rows.append({
         "name": "optimize_policy/process_shift",
         "us_per_call": 0.0,
@@ -189,19 +187,9 @@ def run() -> list:
 
 def main(argv=None):
     argv = sys.argv[1:] if argv is None else argv
-    json_path = None
-    if "--json" in argv:
-        i = argv.index("--json")
-        if i + 1 >= len(argv):
-            sys.exit("usage: python -m benchmarks.optimize_policy [--json PATH]")
-        json_path = argv[i + 1]
-    rows = run()
-    for r in rows:
-        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
-    if json_path is not None:
-        with open(json_path, "w") as f:
-            json.dump(rows, f, indent=1)
-        print(f"# wrote {json_path}", file=sys.stderr)
+    argv, json_path = parse_json_arg(
+        argv, "usage: python -m benchmarks.optimize_policy [--json PATH]")
+    emit(run(), json_path)
 
 
 if __name__ == "__main__":

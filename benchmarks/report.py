@@ -1,7 +1,8 @@
 """Generate the EXPERIMENTS.md §Dry-run/§Roofline/§Failure-sweep tables.
 
 Dry-run and roofline sections read committed artifacts; the failure-sweep
-section evaluates the analytic sweep engine live (seconds on CPU).
+section evaluates the analytic sweep engine live (seconds on CPU).  All
+tables render through ``repro.campaign.analyze``'s emitters.
 
 Usage: PYTHONPATH=src python -m benchmarks.report > /tmp/report.md
 """
@@ -11,6 +12,7 @@ import json
 import pathlib
 
 from benchmarks.roofline import HBM, ICI, PEAK, model_flops_per_device, rooflines
+from repro.campaign import analyze
 
 ARTIFACTS = pathlib.Path(__file__).parent / "artifacts"
 
@@ -27,21 +29,18 @@ def roofline_table(mesh: str) -> str:
     rows = rooflines(mesh)
     if not rows:
         return f"(no artifacts for mesh={mesh})"
-    out = [
+    header = (
         f"### Mesh: {mesh} "
-        f"({'2x16x16 = 512 chips' if mesh == 'multi' else '16x16 = 256 chips'})",
-        "",
-        "| arch | shape | compute | memory | collective | dominant | "
-        "useful (6ND/HLO) | roofline frac | mem GB/dev |",
-        "|---|---|---|---|---|---|---|---|---|",
-    ]
-    for r in rows:
-        out.append(
-            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} | "
-            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
-            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
-            f"{r['roofline_fraction']:.4f} | {r['mem_gb']:.1f} |")
-    return "\n".join(out)
+        f"({'2x16x16 = 512 chips' if mesh == 'multi' else '16x16 = 256 chips'})")
+    table = analyze.markdown_table(
+        ["arch", "shape", "compute", "memory", "collective", "dominant",
+         "useful (6ND/HLO)", "roofline frac", "mem GB/dev"],
+        [[r["arch"], r["shape"], fmt_s(r["compute_s"]),
+          fmt_s(r["memory_s"]), fmt_s(r["collective_s"]),
+          f"**{r['dominant']}**", f"{r['useful_ratio']:.2f}",
+          f"{r['roofline_fraction']:.4f}", f"{r['mem_gb']:.1f}"]
+         for r in rows])
+    return f"{header}\n\n{table}"
 
 
 def dryrun_table(mesh: str) -> str:
@@ -49,27 +48,24 @@ def dryrun_table(mesh: str) -> str:
     if not path.exists():
         return f"(no artifacts for mesh={mesh})"
     recs = json.loads(path.read_text())
-    out = [
-        f"### Mesh: {mesh} — {len(recs)} cells compiled",
-        "",
-        "| arch | shape | HLO FLOPs/dev | bytes/dev | coll bytes/dev | "
-        "AG / AR / RS / A2A / CP counts | args+temp GB/dev | compile s |",
-        "|---|---|---|---|---|---|---|---|",
-    ]
-    for r in recs:
-        cb = r["collectives"]["bytes"]
+
+    def cells(r):
         cc = r["collectives"]["counts"]
         counts = "/".join(str(int(cc[k])) for k in
                           ("all-gather", "all-reduce", "reduce-scatter",
                            "all-to-all", "collective-permute"))
         mem = (r["memory"].get("temp_size_in_bytes", 0)
                + r["memory"].get("argument_size_in_bytes", 0)) / 1e9
-        out.append(
-            f"| {r['arch']} | {r['shape']} | {r['flops']:.2e} | "
-            f"{r['bytes_accessed']:.2e} | "
-            f"{r['collectives']['total_bytes']:.2e} | {counts} | "
-            f"{mem:.1f} | {r['compile_s']:.0f} |")
-    return "\n".join(out)
+        return [r["arch"], r["shape"], f"{r['flops']:.2e}",
+                f"{r['bytes_accessed']:.2e}",
+                f"{r['collectives']['total_bytes']:.2e}", counts,
+                f"{mem:.1f}", f"{r['compile_s']:.0f}"]
+
+    table = analyze.markdown_table(
+        ["arch", "shape", "HLO FLOPs/dev", "bytes/dev", "coll bytes/dev",
+         "AG / AR / RS / A2A / CP counts", "args+temp GB/dev", "compile s"],
+        [cells(r) for r in recs])
+    return f"### Mesh: {mesh} — {len(recs)} cells compiled\n\n{table}"
 
 
 def failure_sweep_table(n_offsets: int = 4096, mtbf_days: float = 30.0) -> str:
@@ -78,21 +74,17 @@ def failure_sweep_table(n_offsets: int = 4096, mtbf_days: float = 30.0) -> str:
     The experiment itself is defined once in benchmarks/failure_sweep.py."""
     from benchmarks.failure_sweep import scenario_stats
 
-    out = [
-        f"### Failure-time sweep — {n_offsets} instants/scenario, "
-        f"MTBF {mtbf_days:g} d for Monte-Carlo",
-        "",
-        "| scenario | mean save % | p5 save | p95 save | sleep occ. | "
-        "infeasible | E[annual] |",
-        "|---|---|---|---|---|---|---|",
-    ]
-    for name, (summ, mc) in scenario_stats(n_offsets, mtbf_days).items():
-        out.append(
-            f"| {name} | {summ.mean_saving_pct:.1f} | "
-            f"{summ.p5_saving_j / 1e3:.1f} kJ | {summ.p95_saving_j / 1e3:.1f} kJ | "
-            f"{summ.sleep_occupancy:.2f} | {summ.infeasible_rate:.3f} | "
-            f"{mc.annual_saving_j / 3.6e6:.2f} kWh |")
-    return "\n".join(out)
+    table = analyze.markdown_table(
+        ["scenario", "mean save %", "p5 save", "p95 save", "sleep occ.",
+         "infeasible", "E[annual]"],
+        [[name, f"{summ.mean_saving_pct:.1f}",
+          f"{summ.p5_saving_j / 1e3:.1f} kJ",
+          f"{summ.p95_saving_j / 1e3:.1f} kJ",
+          f"{summ.sleep_occupancy:.2f}", f"{summ.infeasible_rate:.3f}",
+          f"{mc.annual_saving_j / 3.6e6:.2f} kWh"]
+         for name, (summ, mc) in scenario_stats(n_offsets, mtbf_days).items()])
+    return (f"### Failure-time sweep — {n_offsets} instants/scenario, "
+            f"MTBF {mtbf_days:g} d for Monte-Carlo\n\n{table}")
 
 
 def renewal_table(n_runs: int = 128, makespan_d: float = 30.0,
@@ -114,35 +106,31 @@ def renewal_table(n_runs: int = 128, makespan_d: float = 30.0,
     t0 = time.perf_counter()
     stats = renewal_stats(n_runs=n_runs, makespan_d=makespan_d, mtbf_d=mtbf_d)
     dt = time.perf_counter() - t0
-    max_failures = next(iter(stats.values())).max_failures
+    max_failures = next(iter(stats.values()))["max_failures"]
     n_survivors = len(next(iter(paper_scenarios().values())).survivors)
     dps_scenario = n_runs * max_failures * n_survivors / dt
 
-    out = [
-        f"### Renewal runs — {n_runs} runs, {makespan_d:g} d makespan, "
-        f"{mtbf_d:g} d per-node MTBF (one fused device dispatch)",
-        "",
-        "| scenario | E[failures] | E[run saving] | p5..p95 | run save % | "
-        "sleep occ. | E[annual] | decisions/s |",
-        "|---|---|---|---|---|---|---|---|",
-    ]
-    for name, mc in stats.items():
-        out.append(
-            f"| {name} | {mc.mean_failures:.1f} | "
-            f"{mc.mean_saving_j / 3.6e6:.2f} kWh | "
-            f"{mc.p5_saving_j / 3.6e6:.2f}..{mc.p95_saving_j / 3.6e6:.2f} kWh | "
-            f"{mc.mean_saving_pct:.2f} | {mc.sleep_occupancy:.2f} | "
-            f"{mc.annual_saving_j / 3.6e6:.1f} kWh | {dps_scenario:.2e} |")
+    table = analyze.markdown_table(
+        ["scenario", "E[failures]", "E[run saving]", "p5..p95",
+         "run save %", "sleep occ.", "E[annual]", "decisions/s"],
+        [[name, f"{mc['mean_failures']:.1f}",
+          f"{mc['mean_saving_j'] / 3.6e6:.2f} kWh",
+          f"{mc['p5_saving_j'] / 3.6e6:.2f}.."
+          f"{mc['p95_saving_j'] / 3.6e6:.2f} kWh",
+          f"{mc['mean_saving_pct']:.2f}", f"{mc['sleep_occupancy']:.2f}",
+          f"{mc['annual_saving_j'] / 3.6e6:.1f} kWh", f"{dps_scenario:.2e}"]
+         for name, mc in stats.items()])
     thr = renewal_throughput()
-    out.append("")
-    out.append(
+    return (
+        f"### Renewal runs — {n_runs} runs, {makespan_d:g} d makespan, "
+        f"{mtbf_d:g} d per-node MTBF (one fused device dispatch)\n\n"
+        f"{table}\n\n"
         f"Renewal throughput at the benchmark default shape: host oracle "
         f"{thr['host_dps']:.2e} dec/s (loop {thr['host_loop_s'] * 1e3:.1f} ms "
         f"+ dispatch {thr['host_dispatch_s'] * 1e3:.1f} ms per call) vs "
         f"device engine {thr['device_dps']:.2e} dec/s — "
         f"**{thr['speedup']:.1f}x speedup** (one fused dispatch for all six "
         f"scenarios).")
-    return "\n".join(out)
 
 
 def optimize_table() -> str:
@@ -164,24 +152,25 @@ def optimize_table() -> str:
         mtbf_s=MTBF_H * 3600.0)
     front = optimize.pareto_front(res.mean_energy_j, res.mean_makespan_s)
     knee = optimize.knee_point(res.mean_energy_j, res.mean_makespan_s, front)
-    out = [
-        f"### Policy optimizer — {len(res)} policies, {res.n_runs} runs, "
-        f"{WORK_D:g} d work, {MTBF_H:g} h per-node MTBF ({cfg.name})",
-        "",
-        "| frontier point | interval | mu1 | wait | E[energy] | E[makespan] |",
-        "|---|---|---|---|---|---|",
-    ]
-    for i in front:
+
+    def cells(i):
         pol = res.policy(int(i))
         labels = [l for l, hit in (("knee", int(i) == knee),
                                    ("min energy", int(i) == res.best)) if hit]
         tag = f" ({', '.join(labels)})" if labels else ""
-        out.append(
-            f"| {int(i)}{tag} | {pol['ckpt_interval']:.0f} s | "
-            f"{pol['mu1']:g} | {em.WaitMode(pol['wait_mode']).name.lower()} | "
-            f"{pol['mean_energy_j'] / 3.6e6:.2f} kWh | "
-            f"{pol['mean_makespan_s'] / 3600:.2f} h |")
-    return "\n".join(out)
+        return [f"{int(i)}{tag}", f"{pol['ckpt_interval']:.0f} s",
+                f"{pol['mu1']:g}",
+                em.WaitMode(pol['wait_mode']).name.lower(),
+                f"{pol['mean_energy_j'] / 3.6e6:.2f} kWh",
+                f"{pol['mean_makespan_s'] / 3600:.2f} h"]
+
+    table = analyze.markdown_table(
+        ["frontier point", "interval", "mu1", "wait", "E[energy]",
+         "E[makespan]"],
+        [cells(i) for i in front])
+    return (f"### Policy optimizer — {len(res)} policies, {res.n_runs} runs, "
+            f"{WORK_D:g} d work, {MTBF_H:g} h per-node MTBF ({cfg.name})"
+            f"\n\n{table}")
 
 
 def main():

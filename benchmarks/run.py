@@ -1,58 +1,40 @@
-"""Benchmark harness: one module per paper table/figure + framework benches.
+"""DEPRECATED shim: the pre-campaign benchmark orchestrator.
 
-Prints ``name,us_per_call,derived`` CSV rows per the harness contract.
-  table3  — characterization (paper Table 3)
-  table4  — the six scenarios (paper Table 4), ours vs published
-  strategy_throughput — vectorized Algorithm-1 engine (beyond-paper scale)
-  failure_sweep — dense failure-time grid + Monte-Carlo (core/sweep.py)
-  ft_overhead — checkpoint save/restore + recovery path timings
-  roofline — per (arch x shape x mesh) terms from the dry-run artifacts
+The one-process harness this module used to be predates the campaign
+engine (``src/repro/campaign``).  Experiment matrices are now declared as
+campaign presets and dispatched through the resumable runner:
+
+    PYTHONPATH=src python -m repro.campaign list
+    PYTHONPATH=src python -m repro.campaign run --preset smoke --store DIR
+
+and each benchmark is its own module with a shared ``--json`` record
+format (``benchmarks/_record.py``):
+
+    PYTHONPATH=src python -m benchmarks.table3_characterization [--json PATH]
+    PYTHONPATH=src python -m benchmarks.table4_scenarios        [--json PATH]
+    PYTHONPATH=src python -m benchmarks.strategy_throughput     [--json PATH]
+    PYTHONPATH=src python -m benchmarks.failure_sweep           [--json PATH]
+    PYTHONPATH=src python -m benchmarks.optimize_policy         [--json PATH]
+    PYTHONPATH=src python -m benchmarks.ft_overhead             [--json PATH]
+    PYTHONPATH=src python -m benchmarks.campaign                [--json PATH]
+
+This shim forwards its arguments to ``python -m repro.campaign`` (and,
+with no arguments, shows the campaign list) so existing muscle memory
+lands somewhere useful.
 """
 from __future__ import annotations
 
 import sys
-import time
 
 
-def _emit(name: str, us: float, derived) -> None:
-    print(f"{name},{us:.1f},{derived}")
-
-
-def main() -> None:
-    t0 = time.perf_counter()
-    from benchmarks import table3_characterization
-    for r in table3_characterization.run():
-        _emit(r["name"], 0.0, f"{r['joule_per_fa_second_work']:.1f}J/fa-s")
-
-    from benchmarks import table4_scenarios
-    t1 = time.perf_counter()
-    rows = table4_scenarios.run()
-    dt = (time.perf_counter() - t1) * 1e6 / len(rows)
-    worst = 0.0
-    for r in rows:
-        _emit(r["name"], dt, f"save={r['save_pct']}%_pub={r['published_save_pct']}%")
-        if "scenario3" not in r["name"]:
-            worst = max(worst, r["abs_err_pct"])
-    _emit("table4/max_abs_err_pct_excl_s3", 0.0, f"{worst:.3f}")
-
-    from benchmarks import strategy_throughput
-    for r in strategy_throughput.run():
-        _emit(r["name"], r["us_per_call"], f"{r['decisions_per_s']:.3e}dec/s")
-
-    from benchmarks import failure_sweep
-    for r in failure_sweep.run():
-        _emit(r["name"], r["us_per_call"], r["derived"])
-
-    from benchmarks import ft_overhead
-    for r in ft_overhead.run():
-        _emit(r["name"], r["us_per_call"], r["derived"])
-
-    from benchmarks import roofline
-    for r in roofline.run():
-        _emit(r["name"], r["compute_s"] * 1e6,
-              f"dom={r['dominant']}_rf={r['roofline_fraction']:.4f}")
-    print(f"# total {time.perf_counter() - t0:.1f}s", file=sys.stderr)
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else list(argv)
+    print("benchmarks.run is deprecated — use `python -m repro.campaign` "
+          "(campaigns) or the per-benchmark modules with --json; see "
+          "benchmarks/run.py docstring and docs/campaign.md", file=sys.stderr)
+    from repro.campaign.__main__ import main as campaign_main
+    return campaign_main(argv or ["list"])
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -5,14 +5,18 @@ scale the runtime must decide for every survivor (and ideally a Monte-Carlo
 grid of failure times) within the failure-handling budget.  This measures
 the vectorized jitted engine's nodes/second on CPU (the production agent
 runs the same XLA program on a TPU host).
+
+Run:  PYTHONPATH=src python -m benchmarks.strategy_throughput [--json PATH]
 """
 from __future__ import annotations
 
+import sys
 import time
 
 import jax
 import numpy as np
 
+from benchmarks._record import emit, meta_row, parse_json_arg
 from repro.core import energy_model as em
 from repro.core import strategies
 from repro.core.characterization import paper_machine_profile
@@ -21,7 +25,7 @@ from repro.core.characterization import paper_machine_profile
 def run() -> list:
     profile = paper_machine_profile()
     rng = np.random.default_rng(0)
-    rows = []
+    rows = [meta_row()]
     for n_nodes in (4, 1_000, 100_000):
         for mc in (1, 64):
             t_comp = rng.uniform(10, 2000, (mc, n_nodes)).astype(np.float32)
@@ -41,19 +45,23 @@ def run() -> list:
             for _ in range(reps):
                 call()
             dt = (time.perf_counter() - t0) / reps
+            dps = n_nodes * mc / dt
             rows.append({
                 "name": f"strategy_throughput/n{n_nodes}_mc{mc}",
+                "us_per_call": dt * 1e6,
+                "decisions_per_s": dps,
+                "derived": f"{dps:.3e}decisions/s",
                 "nodes": n_nodes,
                 "monte_carlo": mc,
-                "us_per_call": dt * 1e6,
-                "decisions_per_s": n_nodes * mc / dt,
             })
     return rows
 
 
-def main():
-    for r in run():
-        print(f"{r['name']},{r['us_per_call']:.0f},{r['decisions_per_s']:.3e}")
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    argv, json_path = parse_json_arg(
+        argv, "usage: python -m benchmarks.strategy_throughput [--json PATH]")
+    emit(run(), json_path)
 
 
 if __name__ == "__main__":

@@ -1,16 +1,18 @@
 """Paper Table 3: the power/slowdown characterization and the per-level
-energy-per-unit-work it implies (the quantity Algorithm 1 trades off)."""
+energy-per-unit-work it implies (the quantity Algorithm 1 trades off).
+
+Run:  PYTHONPATH=src python -m benchmarks.table3_characterization [--json PATH]
+"""
 from __future__ import annotations
 
-import time
+import sys
 
-import numpy as np
-
+from benchmarks._record import emit, meta_row, parse_json_arg
 from repro.core.characterization import paper_machine_profile, tpu_v5e_like_profile
 
 
 def run() -> list:
-    rows = []
+    rows = [meta_row()]
     for profile in (paper_machine_profile(), tpu_v5e_like_profile()):
         pt = profile.power_table
         for i in range(pt.num_levels):
@@ -19,6 +21,9 @@ def run() -> list:
             e_ckpt = pt.gamma[i] * pt.p_ckpt[i]
             rows.append({
                 "name": f"table3/{profile.name}/f{pt.freq_ghz[i]:g}",
+                "us_per_call": 0.0,
+                "decisions_per_s": 0.0,
+                "derived": f"{e_work:.1f}J/fa-s_work_{e_ckpt:.1f}J/fa-s_ckpt",
                 "freq_ghz": float(pt.freq_ghz[i]),
                 "p_comp_w": float(pt.p_comp[i]),
                 "beta": float(pt.beta[i]),
@@ -30,10 +35,12 @@ def run() -> list:
     return rows
 
 
-def main():
-    for r in run():
-        print(f"{r['name']},{r['joule_per_fa_second_work']:.1f},"
-              f"{r['joule_per_fa_second_ckpt']:.1f}")
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    argv, json_path = parse_json_arg(
+        argv,
+        "usage: python -m benchmarks.table3_characterization [--json PATH]")
+    emit(run(), json_path)
 
 
 if __name__ == "__main__":

@@ -1,71 +1,100 @@
-"""Failure-time sweeps on the batched analytic engine (core/sweep.py).
+"""Declare -> run -> interrupt -> resume: the campaign engine end to end.
 
-The paper simulates each scenario at one failure instant; its conclusion
-asks for "the behavior of an application under different configurations and
-failure time".  This example answers that with three views, all computed by
-the jitted sweep engine instead of stepping the event simulator per point:
+The paper's conclusion asks for "the behavior of an application under
+different configurations and failure time".  The campaign engine
+(``repro.campaign``) answers that at matrix scale: experiments are
+*declared* as composable axes, every resolved cell gets a content address
+(a hash of its full normalized config + engine version), and results land
+in a resumable store — interrupt a sweep anywhere and the next run picks
+up exactly the missing cells, with finished cells never recomputed and
+re-runs bit-identical (common random numbers make the stacked dispatch
+independent of chunking).
 
-  1. savings vs failure time for scenario 2 — a dense 512-instant curve;
-  2. the strategy map over the (T_comp, T_recover) plane (vectorized
-     Algorithm 1, as before);
-  3. Monte-Carlo expected annual savings per scenario under a 30-day MTBF.
+This walkthrough builds a small scenarios x failure-process matrix,
+"interrupts" the first run with ``limit=``, resumes it, proves the resume
+recomputed nothing, and renders the result table with
+``repro.campaign.analyze`` — no dataframes, no hand-run benchmarks.
 
 Run:  PYTHONPATH=src python examples/scenario_sweep.py
 """
-import jax
-import numpy as np
+import tempfile
 
-from repro.core import WaitMode, evaluate_strategies_profile, paper_machine_profile
-from repro.core import monte_carlo, summarize, sweep_failure_times
-from repro.core.scenarios import paper_scenarios
-
-profile = paper_machine_profile()
-scenarios = paper_scenarios()
+from repro.campaign import analyze, runner, spec, store
+from repro.campaign.presets import equal_mtbf_processes, process_axis, scenario_axis
 
 print("=" * 72)
-print("1. Savings vs failure time — scenario 2, 512 instants, one jitted call")
-print("   (x: failure instant within 2 checkpoint intervals; each char = 16")
-print("   instants; height ~ mean survivor saving)")
+print("1. Declare: axes compose with * (cartesian), .zip(), .filter()")
 print("=" * 72)
-offsets = np.linspace(0.0, 7200.0, 512, endpoint=False) + 0.318
-res = sweep_failure_times(scenarios["scenario2_long_reexec"], offsets)
-saving = np.asarray(res.decision.saving).mean(axis=1)          # (T,)
-buckets = saving.reshape(32, 16).mean(axis=1)
-scale = buckets.max()
-bars = " .:-=+*#%@"
-print("   " + "".join(bars[int(b / scale * (len(bars) - 1))] for b in buckets))
-print(f"   min {saving.min() / 1e3:.1f} kJ   mean {saving.mean() / 1e3:.1f} kJ"
-      f"   max {saving.max() / 1e3:.1f} kJ")
-summ = summarize(res)
-print(f"   sleep occupancy {summ.sleep_occupancy:.0%}, "
-      f"infeasible {summ.infeasible_rate:.1%} of instants")
+matrix = (scenario_axis(("scenario2_long_reexec",
+                         "scenario4_short_active_waits",
+                         "scenario6_no_move_ahead"))
+          * process_axis(equal_mtbf_processes(7.0 * 24 * 3600.0)))
+camp = spec.campaign("example_sweep", matrix, base={
+    "run": {"n_runs": 16, "max_failures": 8,
+            "makespan_s": 10.0 * 24 * 3600.0},
+    "seed": 0,
+})
+print(f"   {len(camp.cells)} cells: "
+      f"{[c.cell_id() for c in camp.cells[:3]]} ...")
 
-print()
-print("=" * 72)
-print("2. Strategy map over the (T_comp, T_recover) plane — one vectorized")
-print("   Algorithm-1 call for the whole 40x40 grid (beyond-paper scale-out)")
-print("=" * 72)
-t_comp = np.linspace(10, 1800, 40)[:, None] * np.ones((1, 40))
-t_rec = np.linspace(30, 3600, 40)[None, :] * np.ones((40, 1))
-d = evaluate_strategies_profile(
-    profile, t_comp, t_comp + t_rec, 0.0, 120.0, int(WaitMode.ACTIVE))
-actions = np.asarray(d.wait_action)
-glyph = {0: ".", 1: "f", 2: "Z"}
-print("   x: T_recover 30s..1h   y: T_comp 10s..30min")
-print("   '.'=no action  'f'=min-frequency wait  'Z'=sleep")
-for row in actions[::4]:
-    print("   " + "".join(glyph[int(a)] for a in row))
-mean_save = float(np.mean(np.asarray(d.saving_pct)))
-print(f"\n   mean saving over the plane: {mean_save:.1f}%")
+with tempfile.TemporaryDirectory() as root:
+    st = store.ResultStore(root)
 
-print()
-print("=" * 72)
-print("3. Monte-Carlo: expected annual savings per scenario (MTBF 30 days,")
-print("   4096 exponential failure draws, fixed PRNG key)")
-print("=" * 72)
-print(f"{'scenario':>34} | {'E[save]/failure':>15} | {'annual':>9} | sleep occ.")
-for name, cfg in scenarios.items():
-    mc = monte_carlo(cfg, jax.random.PRNGKey(0), n_samples=4096,
-                     mtbf_s=30 * 24 * 3600.0)
-    print(f"{name:>34} | {mc.mean_saving_j / 1e3:>12.0f} kJ | "
-          f"{mc.annual_saving_j / 3.6e6:>5.2f} kWh | {mc.sleep_occupancy:.0%}")
+    print()
+    print("=" * 72)
+    print("2. Run, interrupted: limit=2 stands in for a mid-sweep kill —")
+    print("   every finished cell is already durable in the store")
+    print("=" * 72)
+    rep = runner.run_campaign(camp, st, limit=2)
+    print(f"   computed {rep.n_computed}, skipped {rep.n_skipped}, "
+          f"store now holds {len(st)} cells")
+
+    print()
+    print("=" * 72)
+    print("3. Resume: a fresh store handle (new process, same directory)")
+    print("   computes only the missing cells")
+    print("=" * 72)
+    st2 = store.ResultStore(root)
+    rep2 = runner.run_campaign(camp, st2)
+    print(f"   computed {rep2.n_computed}, skipped {rep2.n_skipped} "
+          f"(zero recompute of finished cells)")
+    rep3 = runner.run_campaign(camp, store.ResultStore(root))
+    assert rep3.n_computed == 0 and rep3.n_skipped == len(camp.cells)
+    print(f"   re-run: computed {rep3.n_computed} — the campaign is done")
+
+    print()
+    print("=" * 72)
+    print("4. Bit-identical replay: the same matrix into a fresh store")
+    print("   (different chunking path, same content addresses)")
+    print("=" * 72)
+    with tempfile.TemporaryDirectory() as root_b:
+        runner.run_campaign(camp, store.ResultStore(root_b),
+                            chunk_budget_mb=0.001)   # force 1-lane chunks
+        diffs = store.diff_stores(root, root_b)
+        assert not diffs, diffs
+        print("   diff_stores: no differences — every cell's result payload "
+              "is byte-equal")
+
+    print()
+    print("=" * 72)
+    print("5. Analyze: select/pivot/tables straight off the records")
+    print("=" * 72)
+    recs = list(store.ResultStore(root).records())
+    print(analyze.summary_table(
+        recs,
+        [("scenario", lambda r: analyze.label(r, "scenario")),
+         ("process", lambda r: analyze.label(r, "process")),
+         ("E[failures]", ("result.mean_failures", ".1f")),
+         ("E[run saving] kWh",
+          lambda r: f"{analyze.get(r, 'result.mean_saving_j') / 3.6e6:.2f}"),
+         ("save %", ("result.mean_saving_pct", ".2f")),
+         ("sleep occ.", ("result.sleep_occupancy", ".2f"))],
+        fmt="text"))
+    rows_lbl, cols_lbl, grid = analyze.pivot(
+        recs, "scenario", "process", "result.mean_saving_pct")
+    print()
+    print("   pivot (mean saving %, scenario x process):")
+    print("   " + analyze.markdown_table(
+        ["scenario"] + cols_lbl,
+        [[r] + [f"{v:.2f}" for v in row]
+         for r, row in zip(rows_lbl, grid)]).replace("\n", "\n   "))

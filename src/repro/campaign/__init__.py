@@ -1,0 +1,28 @@
+"""Campaign engine: declarative experiment matrices over the renewal
+Monte-Carlo engine, with a content-addressed resumable result store.
+
+    spec     — axes / cartesian / zip / filter matrix composition and the
+               normalized cell-config schema
+    store    — content-addressed JSONL result store (resume = skip keys)
+    runner   — chunked fused device dispatch + scatter back to cells
+    analyze  — dataframe-free record aggregation and table emitters
+    presets  — the canonical campaign definitions (CLI + benchmarks)
+
+CLI: ``PYTHONPATH=src python -m repro.campaign run --preset smoke
+--store /tmp/c``.  See docs/campaign.md.
+"""
+from repro.campaign.analyze import (           # noqa: F401
+    get, group_by, label, markdown_table, pivot, select, summary_table,
+    text_table,
+)
+from repro.campaign.runner import (            # noqa: F401
+    RunReport, run_campaign, summary_to_result,
+)
+from repro.campaign.spec import (              # noqa: F401
+    CampaignSpec, Matrix, ResolvedCell, axis, build_process, build_scenario,
+    campaign, normalize_config, register_scenario, resolve, scenario_names,
+)
+from repro.campaign.store import (             # noqa: F401
+    ENGINE_VERSION, ResultStore, canonical_json, cell_key, diff_stores,
+    is_store,
+)

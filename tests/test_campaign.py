@@ -1,0 +1,394 @@
+"""Campaign engine tests: spec composition, the content-hash contract,
+store durability, and the runner's resume/chunking bit-identity.
+
+The load-bearing guarantees pinned here:
+
+  * ``store.cell_key`` is invariant to axis ordering and dict insertion
+    order but changes when ANY resolved field changes (property-tested);
+  * resume recomputes ZERO completed cells, and a full re-run at the same
+    key is bit-identical (canonical JSON of the ``result`` payload);
+  * chunking is invisible: forcing 1-lane chunks produces byte-equal
+    records vs one fused dispatch;
+  * the stacked campaign path reproduces ``renewal_monte_carlo_scenarios``
+    exactly (the CRN contract that makes all of the above safe).
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.campaign import analyze, presets, runner, spec, store
+from repro.core import sweep
+
+# small-but-real shape shared by every dispatching test in this module so
+# the jitted program compiles once
+N_RUNS, MAX_FAILURES = 16, 8
+MAKESPAN_S = 10.0 * 24 * 3600.0
+MTBF_S = 7.0 * 24 * 3600.0
+
+SCEN_A = "scenario2_long_reexec"
+SCEN_B = "scenario4_short_active_waits"
+
+
+def _axes():
+    scen = spec.axis("scenario", [(n, {"scenario": {"base": n}})
+                                  for n in (SCEN_A, SCEN_B)])
+    proc = spec.axis("process", [
+        ("exp", {"process": {"kind": "exponential", "mtbf_s": MTBF_S}}),
+        ("wb07", {"process": {"kind": "weibull", "k": 0.7,
+                              "mtbf_s": MTBF_S}})])
+    return scen, proc
+
+
+def _base():
+    return {"run": {"n_runs": N_RUNS, "max_failures": MAX_FAILURES,
+                    "makespan_s": MAKESPAN_S},
+            "seed": 0}
+
+
+def _campaign(name="t"):
+    scen, proc = _axes()
+    return spec.campaign(name, scen * proc, base=_base())
+
+
+# ---------------------------------------------------------------------------
+# spec composition
+# ---------------------------------------------------------------------------
+
+def test_cartesian_product_counts_and_labels():
+    scen, proc = _axes()
+    m = scen * proc
+    assert len(m) == 4
+    assert m.cells[0].label_dict == {"scenario": SCEN_A, "process": "exp"}
+    assert m.cells[0].cell_id() == f"scenario={SCEN_A}/process=exp"
+    # C-order: the right axis varies fastest
+    assert [c.label_dict["process"] for c in m.cells] == \
+        ["exp", "wb07", "exp", "wb07"]
+
+
+def test_zip_pairs_and_rejects_length_mismatch():
+    scen, proc = _axes()
+    z = scen.zip(spec.axis("mtbf", [
+        ("short", {"process": {"kind": "exponential", "mtbf_s": 1e5}}),
+        ("long", {"process": {"kind": "exponential", "mtbf_s": 1e6}})]))
+    assert len(z) == 2
+    assert z.cells[1].config["process"]["mtbf_s"] == 1e6
+    three = spec.axis("seed", [(str(i), {"seed": i}) for i in range(3)])
+    with pytest.raises(ValueError, match="equal lengths"):
+        scen.zip(three)
+
+
+def test_filter_prunes_cells():
+    scen, proc = _axes()
+    m = (scen * proc).filter(lambda lbl, cfg: lbl["process"] == "exp")
+    assert len(m) == 2
+    assert all(c.label_dict["process"] == "exp" for c in m.cells)
+
+
+def test_conflicting_axes_rejected():
+    a = spec.axis("a", [("x", {"policy": {"mu1": 3.0}})])
+    b = spec.axis("b", [("y", {"policy": {"mu1": 4.0}})])
+    with pytest.raises(ValueError, match="conflicting values for 'policy.mu1'"):
+        _ = a * b
+    # identical values are tolerated (shared pin, not a conflict)
+    c = spec.axis("c", [("z", {"policy": {"mu1": 3.0}})])
+    assert (a * c).cells[0].config["policy"]["mu1"] == 3.0
+
+
+def test_duplicate_axis_labels_rejected():
+    with pytest.raises(ValueError, match="duplicate labels"):
+        spec.axis("a", [("x", {}), ("x", {})])
+
+
+def test_validation_errors():
+    scen, _ = _axes()
+    with pytest.raises(ValueError, match="unknown policy knobs"):
+        spec.campaign("t", scen, base={
+            **_base(), "policy": {"nonsense": 1.0}})
+    with pytest.raises(ValueError, match="exactly one of makespan_s"):
+        spec.campaign("t", scen, base={
+            "run": {"n_runs": 4, "max_failures": 2,
+                    "makespan_s": 1e6, "work_s": 1e6},
+            "process": {"kind": "exponential", "mtbf_s": MTBF_S}})
+    with pytest.raises(ValueError, match="unknown scenario base"):
+        spec.campaign("t", spec.axis(
+            "s", [("bad", {"scenario": {"base": "no_such"}})]), base=_base())
+    with pytest.raises(ValueError, match="non-finite"):
+        spec.normalize_config({
+            "scenario": {"base": SCEN_A},
+            "process": {"kind": "exponential", "mtbf_s": float("nan")},
+            "run": {"n_runs": 4, "max_failures": 2, "makespan_s": 1e6}})
+
+
+def test_duplicate_resolved_cells_rejected():
+    scen, _ = _axes()
+    dup = spec.axis("p", [("a", {"process": {"kind": "exponential",
+                                             "mtbf_s": MTBF_S}}),
+                          ("b", {"process": {"kind": "exponential",
+                                             "mtbf_s": MTBF_S}})])
+    with pytest.raises(ValueError, match="resolve to the same config"):
+        spec.campaign("t", scen * dup, base=_base())
+
+
+def test_policy_grid_preset_matches_optimize_grid_order():
+    """Campaign cell order == optimize.policy_grid C-order (record p is
+    grid row p — benchmarks/optimize_policy.py depends on this)."""
+    from repro.core import optimize
+    camp = presets.policy_grid()
+    table = optimize.policy_grid(
+        ckpt_interval=np.asarray(presets.OPT_INTERVALS),
+        mu1=list(presets.OPT_MU1), wait_mode=[0, 1])
+    assert len(camp.cells) == len(table)
+    for p, cell in enumerate(camp.cells):
+        pol = table.policy(p)
+        assert cell.config["policy"]["ckpt_interval"] == \
+            pytest.approx(float(pol["ckpt_interval"]))
+        assert cell.config["policy"]["mu1"] == pytest.approx(float(pol["mu1"]))
+        assert cell.config["policy"]["wait_mode"] == int(pol["wait_mode"])
+
+
+# ---------------------------------------------------------------------------
+# content-hash contract
+# ---------------------------------------------------------------------------
+
+def _config(mtbf=MTBF_S, n_runs=N_RUNS, seed=0, interval=None):
+    cfg = {"scenario": {"base": SCEN_A},
+           "process": {"kind": "exponential", "mtbf_s": mtbf},
+           "run": {"n_runs": n_runs, "max_failures": MAX_FAILURES,
+                   "makespan_s": MAKESPAN_S},
+           "seed": seed}
+    if interval is not None:
+        cfg["policy"] = {"ckpt_interval": interval}
+    return cfg
+
+
+def _reordered(d):
+    """Same mapping, reversed insertion order at every level."""
+    if isinstance(d, dict):
+        return {k: _reordered(d[k]) for k in reversed(list(d))}
+    return d
+
+
+def test_cell_key_invariant_to_dict_key_order():
+    cfg = spec.normalize_config(_config(interval=3600.0))
+    assert store.cell_key(cfg) == store.cell_key(_reordered(cfg))
+
+
+def test_cell_key_invariant_to_axis_ordering():
+    """scenario x process and process x scenario declare the same cells —
+    identical content addresses, whatever the composition order."""
+    scen, proc = _axes()
+    keys_ab = {store.cell_key(c.config)
+               for c in spec.campaign("ab", scen * proc, base=_base()).cells}
+    keys_ba = {store.cell_key(c.config)
+               for c in spec.campaign("ba", proc * scen, base=_base()).cells}
+    assert keys_ab == keys_ba
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(min_value=1e4, max_value=1e7),
+       st.integers(min_value=1, max_value=64),
+       st.integers(min_value=0, max_value=2**31 - 1),
+       st.floats(min_value=600.0, max_value=86400.0))
+def test_cell_key_changes_on_any_field_change(mtbf, n_runs, seed, interval):
+    base_cfg = spec.normalize_config(_config(interval=3600.0))
+    key0 = store.cell_key(base_cfg)
+    for variant in (
+        _config(mtbf=mtbf * 1.0000001, interval=3600.0),
+        _config(n_runs=n_runs + N_RUNS, interval=3600.0),
+        _config(seed=seed + 1, interval=3600.0),
+        _config(interval=interval + 100000.0),
+        _config(interval=None),                       # policy key removed
+    ):
+        assert store.cell_key(spec.normalize_config(variant)) != key0
+    # engine version participates too
+    assert store.cell_key(base_cfg, engine_version="other") != key0
+    # and the hash is stable across normalize calls
+    assert store.cell_key(spec.normalize_config(_config(interval=3600.0))) \
+        == key0
+
+
+def test_cell_key_numpy_scalars_hash_like_python_floats():
+    a = spec.normalize_config(_config(mtbf=np.float64(MTBF_S)))
+    b = spec.normalize_config(_config(mtbf=float(MTBF_S)))
+    assert store.cell_key(a) == store.cell_key(b)
+
+
+# ---------------------------------------------------------------------------
+# store durability
+# ---------------------------------------------------------------------------
+
+def _fake_record(i):
+    return dict(labels={"i": str(i)}, config={"cell": i},
+                result={"value": float(i)}, meta={"wall_s": 0.1})
+
+
+def test_store_roundtrip_and_idempotent_put(tmp_path):
+    st_ = store.ResultStore(tmp_path, shard_size=2)
+    for i in range(5):
+        st_.put(f"k{i}", **_fake_record(i))
+    assert len(st_) == 5
+    # idempotent: second put returns the original record
+    first = st_.get("k0")
+    assert st_.put("k0", **_fake_record(99)) is first
+    # reload from disk (fresh handle) sees everything, across shards
+    st2 = store.ResultStore(tmp_path)
+    assert st2.keys() == {f"k{i}" for i in range(5)}
+    assert st2.get("k3")["result"] == {"value": 3.0}
+    assert len(list((tmp_path / "shards").glob("cells-*.jsonl"))) >= 2
+
+
+def test_store_skips_torn_trailing_line(tmp_path):
+    st_ = store.ResultStore(tmp_path)
+    for i in range(3):
+        st_.put(f"k{i}", **_fake_record(i))
+    shard = next((tmp_path / "shards").glob("cells-*.jsonl"))
+    with open(shard, "a") as f:
+        f.write('{"key": "k_torn", "labels": {}, "resu')   # kill mid-write
+    st2 = store.ResultStore(tmp_path)
+    assert st2.keys() == {"k0", "k1", "k2"}
+    # the torn cell is simply recomputable
+    st2.put("k_torn", **_fake_record(9))
+    assert store.ResultStore(tmp_path).has("k_torn")
+
+
+def test_store_rejects_non_finite_results(tmp_path):
+    st_ = store.ResultStore(tmp_path)
+    with pytest.raises(ValueError):
+        st_.put("k", labels={}, config={}, result={"v": float("inf")})
+    assert len(st_) == 0
+
+
+def test_diff_stores(tmp_path):
+    a, b = store.ResultStore(tmp_path / "a"), store.ResultStore(tmp_path / "b")
+    a.put("k0", **_fake_record(0))
+    b.put("k0", **_fake_record(0))
+    assert store.diff_stores(tmp_path / "a", tmp_path / "b") == []
+    a.put("k1", **_fake_record(1))
+    rec2 = _fake_record(2)
+    rec2["result"] = {"value": -1.0}
+    b.put("k2", **rec2)
+    diffs = store.diff_stores(tmp_path / "a", tmp_path / "b")
+    assert len(diffs) == 2 and any("k1" in d for d in diffs)
+    # meta differences are NOT result differences
+    recm = _fake_record(3)
+    a.put("k3", **recm)
+    recm["meta"] = {"wall_s": 999.0}
+    b.put("k3", **recm)
+    assert not any("k3" in d
+                   for d in store.diff_stores(tmp_path / "a", tmp_path / "b"))
+
+
+# ---------------------------------------------------------------------------
+# runner: resume, chunking, bit-identity, parity
+# ---------------------------------------------------------------------------
+
+def test_resume_recomputes_zero_completed_cells(tmp_path):
+    camp = _campaign()
+    st_ = store.ResultStore(tmp_path)
+    rep1 = runner.run_campaign(camp, st_, limit=3)
+    assert (rep1.n_computed, rep1.n_skipped) == (3, 0)
+    # fresh handle over the same directory — the interrupted-run picture
+    rep2 = runner.run_campaign(camp, store.ResultStore(tmp_path))
+    assert (rep2.n_computed, rep2.n_skipped) == (1, 3)
+    rep3 = runner.run_campaign(camp, store.ResultStore(tmp_path))
+    assert (rep3.n_computed, rep3.n_skipped) == (0, 4)
+    # records come back in spec cell order regardless of compute order
+    assert [r["labels"] for r in rep3.records] == \
+        [c.label_dict for c in camp.cells]
+
+
+def test_rerun_is_bit_identical_and_chunking_invisible(tmp_path):
+    camp = _campaign()
+    runner.run_campaign(camp, store.ResultStore(tmp_path / "fused"))
+    # 1-lane chunks: every cell in its own dispatch
+    rep = runner.run_campaign(camp, store.ResultStore(tmp_path / "lanes"),
+                              chunk_budget_mb=1e-6)
+    assert rep.n_chunks == 4
+    assert store.diff_stores(tmp_path / "fused", tmp_path / "lanes") == []
+    # interrupted-then-resumed store is byte-equal too
+    st3 = store.ResultStore(tmp_path / "resumed")
+    runner.run_campaign(camp, st3, limit=1)
+    runner.run_campaign(camp, store.ResultStore(tmp_path / "resumed"))
+    assert store.diff_stores(tmp_path / "fused", tmp_path / "resumed") == []
+
+
+def test_campaign_matches_renewal_monte_carlo_scenarios():
+    """The stacked heterogeneous dispatch reproduces the scenario-path
+    engine bit-for-bit (CRN: gap sampling never sees the lane axis)."""
+    from repro.core.scenarios import paper_scenarios
+    camp = spec.campaign("parity", _axes()[0], base={
+        **_base(),
+        "process": {"kind": "exponential", "mtbf_s": MTBF_S}})
+    recs = runner.run_campaign(camp).records
+    cfgs = [paper_scenarios()[n] for n in (SCEN_A, SCEN_B)]
+    direct = sweep.renewal_monte_carlo_scenarios(
+        cfgs, jax.random.PRNGKey(0), n_runs=N_RUNS, makespan_s=MAKESPAN_S,
+        mtbf_s=MTBF_S, max_failures=MAX_FAILURES)
+    for rec, (name, summ) in zip(recs, direct.items()):
+        expect = runner.summary_to_result(summ)
+        got = {k: v for k, v in rec["result"].items()
+               if k != "mean_makespan_s"}
+        assert got == expect, f"campaign record diverges for {name}"
+
+
+def test_chunk_lanes_memory_budget():
+    camp = _campaign()
+    exp = runner._RESOLVE_CACHE.get(
+        store.cell_key(camp.cells[0].config)) or \
+        spec.resolve(camp.cells[0].config)
+    assert runner._chunk_lanes(100, exp, chunk_budget_mb=1e9) == 100
+    assert runner._chunk_lanes(100, exp, chunk_budget_mb=1e-9) == 1
+    per_lane = 2.0 * exp.n_runs * exp.max_failures * \
+        (96 + 88 * (len(exp.cfg.survivors) + 1))
+    assert runner._chunk_lanes(100, exp, per_lane * 3 / 1e6) == 3
+
+
+def test_runner_names_offending_cell_on_bad_config():
+    scen = spec.axis("scenario", [
+        (SCEN_A, {"scenario": {"base": SCEN_A}})])
+    camp = spec.campaign("bad", scen, base={
+        **_base(), "policy": {"ckpt_interval": 1.0},
+        "process": {"kind": "exponential", "mtbf_s": MTBF_S}})
+    with pytest.raises(ValueError, match=f"scenario={SCEN_A}"):
+        runner.run_campaign(camp)
+
+
+# ---------------------------------------------------------------------------
+# analyze
+# ---------------------------------------------------------------------------
+
+def test_analyze_verbs_and_tables(tmp_path):
+    camp = _campaign()
+    recs = runner.run_campaign(camp, store.ResultStore(tmp_path)).records
+    assert len(analyze.select(recs, process="exp")) == 2
+    grouped = analyze.group_by(recs, "scenario")
+    assert set(grouped) == {SCEN_A, SCEN_B}
+    v = analyze.get(recs[0], "result.mean_saving_j")
+    assert isinstance(v, float)
+    assert analyze.get(recs[0], "result.not_there", -1.0) == -1.0
+
+    rows_lbl, cols_lbl, grid = analyze.pivot(
+        recs, "scenario", "process", "result.mean_failures")
+    assert rows_lbl == [SCEN_A, SCEN_B] and cols_lbl == ["exp", "wb07"]
+    assert all(v is not None for row in grid for v in row)
+
+    md = analyze.summary_table(
+        recs, [("scenario", lambda r: analyze.label(r, "scenario")),
+               ("E[fail]", ("result.mean_failures", ".1f"))])
+    assert md.count("\n") == len(recs) + 1 and md.startswith("| scenario")
+    txt = analyze.summary_table(recs, [("s", "labels.scenario")], fmt="text")
+    assert "---" in txt.splitlines()[1]
+
+
+def test_store_bench_rows_roundtrip(tmp_path):
+    st_ = store.ResultStore(tmp_path)
+    rows = [{"name": "campaign/cells_4", "us_per_call": 1.0,
+             "decisions_per_s": 2.0, "derived": "x"}]
+    st_.put_bench_rows(rows)
+    assert store.ResultStore(tmp_path).bench_rows() == rows
+    assert store.is_store(tmp_path)
+    assert not store.is_store(tmp_path / "nope")

@@ -1,0 +1,144 @@
+"""Regression-gate tests: record merging, required-row and speedup gating,
+machine-fingerprint handling, and campaign stores as record sources."""
+import json
+
+import pytest
+
+from benchmarks import check_regression as cr
+
+MACHINE = "Linux-x86_64-cpu2"
+
+
+def _meta(machine=MACHINE):
+    return {"name": "meta/machine", "us_per_call": 0.0,
+            "decisions_per_s": 0.0, "derived": machine}
+
+
+def _full_fresh(machine=MACHINE, dps=1e6, speedup=8.0):
+    """A fresh record set satisfying every machine-independent gate."""
+    return [
+        _meta(machine),
+        {"name": "failure_sweep/renewal_weibull_k0.7", "us_per_call": 1.0,
+         "decisions_per_s": dps, "derived": "x"},
+        {"name": "failure_sweep/renewal_speedup", "us_per_call": 0.0,
+         "decisions_per_s": 0.0, "derived": f"{speedup:g}x_device_vs_host"},
+        {"name": "optimize_policy/grid_42x64x64x3", "us_per_call": 1.0,
+         "decisions_per_s": dps, "derived": "x"},
+        {"name": "ft/controller_retune", "us_per_call": 1.0,
+         "decisions_per_s": 0.0, "derived": "x"},
+        {"name": "campaign/cells_42x64x64x3", "us_per_call": 1.0,
+         "decisions_per_s": dps, "derived": "x"},
+    ]
+
+
+def _write(path, rows):
+    path.write_text(json.dumps(rows))
+    return str(path)
+
+
+def _baseline_dir(tmp_path, rows=None, name="BENCH_all.json"):
+    d = tmp_path / "artifacts"
+    d.mkdir(exist_ok=True)
+    _write(d / name, rows if rows is not None else _full_fresh())
+    return d
+
+
+def _run(tmp_path, fresh_rows, base_rows=None, capsys=None):
+    fresh = _write(tmp_path / "BENCH_fresh.json", fresh_rows)
+    base = _baseline_dir(tmp_path, base_rows)
+    return cr.main([fresh, "--baseline", str(base)])
+
+
+def test_passes_on_identical_records(tmp_path):
+    assert _run(tmp_path, _full_fresh()) == 0
+
+
+def test_required_row_missing_fails(tmp_path):
+    fresh = [r for r in _full_fresh()
+             if not r["name"].startswith("campaign/")]
+    assert _run(tmp_path, fresh) == 1
+
+
+def test_all_required_prefixes_are_gated(tmp_path):
+    for prefix in cr.REQUIRED_ROW_PREFIXES:
+        fresh = [r for r in _full_fresh()
+                 if not r["name"].startswith(prefix)]
+        assert _run(tmp_path, fresh) == 1, prefix
+
+
+def test_throughput_regression_fails_on_like_hardware(tmp_path):
+    slow = _full_fresh(dps=1e6 * (1.0 - cr.THRESHOLD) * 0.9)
+    assert _run(tmp_path, slow) == 1
+    ok = _full_fresh(dps=1e6 * (1.0 - cr.THRESHOLD) * 1.1)
+    assert _run(tmp_path, ok) == 0
+
+
+def test_machine_mismatch_skips_absolute_rows(tmp_path):
+    """Different hardware: a 10x decisions/s drop must NOT fail — only the
+    ratio and presence gates apply."""
+    other = _full_fresh(machine="Linux-aarch64-cpu64", dps=1e5)
+    assert _run(tmp_path, other) == 0
+
+
+def test_speedup_ratio_gated_regardless_of_machine(tmp_path):
+    bad = _full_fresh(machine="Linux-aarch64-cpu64",
+                      speedup=8.0 * (1.0 - cr.THRESHOLD) * 0.9)
+    assert _run(tmp_path, bad) == 1
+
+
+def test_fresh_collision_rejected(tmp_path):
+    """Two positional records of the same benchmark abort (the pre-PR-5
+    FRESH BASELINE calling convention)."""
+    a = _write(tmp_path / "BENCH_a.json", _full_fresh())
+    b = _write(tmp_path / "BENCH_b.json", _full_fresh())
+    base = _baseline_dir(tmp_path)
+    with pytest.raises(SystemExit, match="duplicates fresh rows"):
+        cr.main([a, b, "--baseline", str(base)])
+
+
+def test_multi_record_merge_disjoint_ok(tmp_path):
+    """Disjoint fresh records (the real CI invocation) merge cleanly."""
+    rows = _full_fresh()
+    a = _write(tmp_path / "BENCH_a.json", [rows[0]] + rows[1:3])
+    b = _write(tmp_path / "BENCH_b.json", [rows[0]] + rows[3:])
+    base = _baseline_dir(tmp_path)
+    assert cr.main([a, b, "--baseline", str(base)]) == 0
+
+
+def test_mixed_machine_baselines_error(tmp_path):
+    d = tmp_path / "artifacts"
+    d.mkdir()
+    _write(d / "BENCH_a.json", [_meta("m1")] + _full_fresh()[1:3])
+    _write(d / "BENCH_b.json", [_meta("m2")] + _full_fresh()[3:])
+    fresh = _write(tmp_path / "BENCH_fresh.json", _full_fresh())
+    assert cr.main([fresh, "--baseline", str(d)]) == 1
+
+
+def test_no_baseline_skips(tmp_path):
+    fresh = _write(tmp_path / "BENCH_fresh.json", _full_fresh())
+    assert cr.main([fresh, "--baseline", str(tmp_path / "missing")]) == 0
+
+
+def test_campaign_store_as_fresh_record(tmp_path):
+    """A campaign store directory (bench.json) reads as a fresh record."""
+    from repro.campaign import store
+
+    st = store.ResultStore(tmp_path / "campaign_store")
+    st.put_bench_rows(_full_fresh())
+    base = _baseline_dir(tmp_path)
+    assert cr.main([str(tmp_path / "campaign_store"),
+                    "--baseline", str(base)]) == 0
+
+
+def test_campaign_store_as_baseline(tmp_path):
+    from repro.campaign import store
+
+    st = store.ResultStore(tmp_path / "base_store")
+    st.put_bench_rows(_full_fresh())
+    fresh = _write(tmp_path / "BENCH_fresh.json",
+                   _full_fresh(dps=2e6, speedup=9.0))
+    assert cr.main([fresh, "--baseline",
+                    str(tmp_path / "base_store")]) == 0
+    slow = _write(tmp_path / "BENCH_slow.json", _full_fresh(dps=1e5))
+    assert cr.main([slow, "--baseline",
+                    str(tmp_path / "base_store")]) == 1
