@@ -44,6 +44,9 @@ DEFAULT_BASELINE = pathlib.Path(__file__).parent / "artifacts"
 # online observe->fit->retune loop no longer completes)
 REQUIRED_ROW_PREFIXES = (
     "failure_sweep/renewal_weibull",
+    # the correlated shock sampler fused into the device engine
+    # (core.topology) — absence means the correlated path broke
+    "failure_sweep/renewal_correlated",
     "optimize_policy/grid_",
     "ft/controller_retune",
     # the chunked campaign-runner path (repro.campaign.runner) — its

@@ -43,6 +43,7 @@ import numpy as np
 
 from repro.campaign import presets, runner
 from repro.core import failures, sweep
+from repro.core import topology as node_topology
 from repro.core.scenarios import paper_scenarios
 from benchmarks._record import (
     emit, machine_fingerprint, meta_row, parse_json_arg,
@@ -64,6 +65,12 @@ RENEWAL_REPS = 7            # interleaved timing repetitions (median)
 RENEWAL_WEIBULL_K = presets.RENEWAL_WEIBULL_K
                             # per-process row: infant-mortality Weibull at
                             # the same per-node MTBF as the exponential rows
+
+# correlated row: rack-level shared shocks layered on the Weibull marginals
+# (core.topology) — same shape/rates as presets.table4_correlated's rack lane
+CORR_RACK_SIZE = 3
+CORR_SHOCK_MTBS_D = 10.0
+CORR_P_KILL = 0.6
 
 # --full scaling shape: one device dispatch
 FULL_RUNS = 4096
@@ -239,6 +246,43 @@ def renewal_process_throughput(
     }
 
 
+def correlated_throughput(
+    n_runs: int = RENEWAL_RUNS,
+    max_failures: int = RENEWAL_MAX_FAILURES,
+    reps: int = RENEWAL_REPS,
+) -> dict:
+    """Renewal decisions/s with the correlated shock sampler fused into the
+    device program — the six-scenario Weibull task of
+    ``renewal_process_throughput`` plus rack-level shared shocks
+    (``core.topology``: racing shock clocks, Bernoulli kill sets, survivor
+    age boosts, multi-felled epoch geometry in the scan).  The delta
+    against the ``renewal_weibull`` row is the price of correlation.
+    """
+    cfg_list = list(paper_scenarios().values())
+    key = jax.random.PRNGKey(1)
+    process = failures.Weibull.from_mtbf(
+        RENEWAL_WEIBULL_K, RENEWAL_MTBF_D * 24 * 3600.0)
+    topo = node_topology.rack_topology(
+        len(cfg_list[0].survivors) + 1, CORR_RACK_SIZE,
+        shock_mtbs_s=CORR_SHOCK_MTBS_D * 24 * 3600.0,
+        p_kill=CORR_P_KILL, age_boost_s=3600.0)
+    kw = dict(n_runs=n_runs, makespan_s=RENEWAL_MAKESPAN_D * 24 * 3600.0,
+              max_failures=max_failures, process=process, topology=topo)
+    fn = lambda: sweep.renewal_monte_carlo_scenarios(cfg_list, key, **kw)
+    summaries = fn()                       # warm (compile) + stats
+    dt = _median_time(fn, reps)
+    n = len(cfg_list) * n_runs * max_failures * len(cfg_list[0].survivors)
+    mc = summaries["scenario2_long_reexec"]
+    return {
+        "seconds": dt,
+        "decisions": n,
+        "decisions_per_s": n / dt,
+        "mean_failures": mc.mean_failures,
+        "mean_saving_j": mc.mean_saving_j,
+        "mean_saving_pct": mc.mean_saving_pct,
+    }
+
+
 def device_scaling(n_runs: int = FULL_RUNS, max_failures: int = FULL_MAX_FAILURES,
                    reps: int = 3) -> dict:
     """One fused dispatch at the large shape (--full): 4096 runs x 64 epochs
@@ -345,6 +389,20 @@ def run(full: bool = False) -> list:
             f"_k={RENEWAL_WEIBULL_K}"
             f"_failures={wthr['mean_failures']:.1f}"
             f"_save_pct={wthr['mean_saving_pct']:.2f}"
+        ),
+    })
+    # correlated row: rack shocks fused into the same device program;
+    # the regression gate also requires this row
+    cthr = correlated_throughput()
+    rows.append({
+        "name": f"failure_sweep/renewal_correlated_device_6x{shape}",
+        "us_per_call": cthr["seconds"] * 1e6,
+        "decisions_per_s": cthr["decisions_per_s"],
+        "derived": (
+            f"{cthr['decisions_per_s']:.3e}dec/s"
+            f"_shock={CORR_SHOCK_MTBS_D:g}d"
+            f"_failures={cthr['mean_failures']:.1f}"
+            f"_save_pct={cthr['mean_saving_pct']:.2f}"
         ),
     })
     if full:

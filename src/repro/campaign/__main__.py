@@ -9,13 +9,17 @@
 ``run`` skips cells whose content address is already stored (resume);
 ``--limit`` computes at most N pending cells (a deterministic interrupted
 run); ``--expect-skipped`` asserts resume correctness (exit 1 on
-mismatch — the CI smoke job uses it); ``diff`` exits 1 unless both stores
-hold bit-identical deterministic results for every shared cell.
+mismatch — the CI smoke job uses it); ``--limit-seed S`` /
+``--expect-skipped-seed S`` derive that N pseudo-randomly from S so the
+chaos smoke kills the run at a different cell every CI seed while both
+halves agree on where; ``diff`` exits 1 unless both stores hold
+bit-identical deterministic results for every shared cell.
 """
 from __future__ import annotations
 
 import argparse
 import os
+import random
 import sys
 
 from repro.campaign import analyze, presets, runner, store as store_mod
@@ -40,6 +44,14 @@ def _cmd_list(_args) -> int:
     return 0
 
 
+def _seeded_cut(seed: int, n_total: int) -> int:
+    """The chaos smoke's kill point: a pseudo-random cell count in
+    [1, n_total) derived only from the seed, so the interrupted run
+    (--limit-seed S) and the resumed run (--expect-skipped-seed S) agree
+    on where the kill happened without sharing state."""
+    return random.Random(seed).randrange(1, max(n_total, 2))
+
+
 def _cmd_run(args) -> int:
     build = presets.PRESETS.get(args.preset)
     if build is None:
@@ -47,13 +59,18 @@ def _cmd_run(args) -> int:
               f"known: {sorted(presets.PRESETS)}")
         return 1
     campaign = build()
+    limit, expect_skipped = args.limit, args.expect_skipped
+    if args.limit_seed is not None:
+        limit = _seeded_cut(args.limit_seed, len(campaign.cells))
+    if args.expect_skipped_seed is not None:
+        expect_skipped = _seeded_cut(args.expect_skipped_seed,
+                                     len(campaign.cells))
     store = store_mod.ResultStore(args.store) if args.store else None
     report = runner.run_campaign(
-        campaign, store, limit=args.limit,
+        campaign, store, limit=limit,
         chunk_budget_mb=args.chunk_budget_mb, progress=print)
-    if args.expect_skipped is not None and \
-            report.n_skipped != args.expect_skipped:
-        print(f"resume check FAILED: expected {args.expect_skipped} skipped "
+    if expect_skipped is not None and report.n_skipped != expect_skipped:
+        print(f"resume check FAILED: expected {expect_skipped} skipped "
               f"cells, got {report.n_skipped}")
         return 1
     if args.table:
@@ -101,6 +118,11 @@ def main(argv=None) -> int:
                        help="compute at most N pending cells")
     p_run.add_argument("--expect-skipped", type=int, default=None,
                        help="exit 1 unless exactly N cells were resumed")
+    p_run.add_argument("--limit-seed", type=int, default=None,
+                       help="derive --limit pseudo-randomly from a seed "
+                            "(chaos smoke kill point)")
+    p_run.add_argument("--expect-skipped-seed", type=int, default=None,
+                       help="derive --expect-skipped from the same seed")
     p_run.add_argument("--chunk-budget-mb", type=float,
                        default=runner.DEFAULT_CHUNK_BUDGET_MB)
     p_run.add_argument("--table", action="store_true",

@@ -123,6 +123,41 @@ def process_shift(
     })
 
 
+def topology_axis(specs: dict) -> spec.Matrix:
+    """Axis over correlated-shock topology specs: label -> topology dict
+    (``{"kind": "rack", ...}``); a ``None`` value means iid sampling."""
+    return spec.axis("topology", [
+        (l, {"topology": dict(t)} if t is not None else {})
+        for l, t in specs.items()])
+
+
+def table4_correlated(
+    n_runs: int = RENEWAL_RUNS,
+    max_failures: int = RENEWAL_MAX_FAILURES,
+    makespan_d: float = RENEWAL_MAKESPAN_D,
+    mtbf_d: float = RENEWAL_MTBF_D,
+    shock_mtbs_d: float = 10.0,
+    p_kill: float = 0.6,
+) -> spec.CampaignSpec:
+    """The six Table-4 scenarios under Weibull renewal with an iid lane
+    and a rack-correlated lane (shared shocks, ``core.topology``) — the
+    matrix behind the correlated-vs-iid energy comparison."""
+    mtbf_s = mtbf_d * 24 * 3600.0
+    m = scenario_axis() * topology_axis({
+        "iid": None,
+        "rack": {"kind": "rack", "rack_size": 3,
+                 "shock_mtbs_s": shock_mtbs_d * 24 * 3600.0,
+                 "p_kill": p_kill, "age_boost_s": 3600.0},
+    })
+    return spec.campaign("table4_correlated", m, base={
+        "process": {"kind": "weibull", "k": RENEWAL_WEIBULL_K,
+                    "mtbf_s": mtbf_s},
+        "run": {"n_runs": n_runs, "max_failures": max_failures,
+                "makespan_s": makespan_d * 24 * 3600.0},
+        "seed": 0,
+    })
+
+
 def smoke() -> spec.CampaignSpec:
     """A four-cell matrix sized for CI smoke tests and examples: two
     scenarios x {exponential, Weibull} at small run counts."""
@@ -140,6 +175,7 @@ def smoke() -> spec.CampaignSpec:
 PRESETS = {
     "smoke": smoke,
     "table4_renewal": table4_renewal,
+    "table4_correlated": table4_correlated,
     "policy_grid": policy_grid,
     "process_shift": process_shift,
 }

@@ -104,6 +104,7 @@ def _group_signature(run: CellRun) -> tuple:
     cfg, exp = run.exp.cfg, run.exp
     return (
         store_mod.canonical_json(run.cell.config["process"]),
+        store_mod.canonical_json(run.cell.config.get("topology") or {}),
         exp.n_runs, exp.max_failures, exp.seed,
         len(cfg.survivors),
         tuple(s.peer for s in cfg.survivors),
@@ -134,7 +135,7 @@ def _dispatch_chunk(chunk: list, progress) -> list:
     stats = jax.device_get(sweep.renewal_monte_carlo_policies(
         stacked, jax.random.PRNGKey(exp0.seed), makespan_s=makespans,
         n_runs=exp0.n_runs, max_failures=exp0.max_failures,
-        process=proc, stats=True))
+        process=proc, topology=exp0.topology, stats=True))
     end_time = np.asarray(stats.end_time, np.float64)
     out = []
     for i, r in enumerate(chunk):

@@ -31,6 +31,9 @@ The cell schema (all keys JSON scalars / nested dicts):
     scenario  {"base": <registry name>, **builder params}
     policy    optional subset of scenarios.apply_policy knobs
     process   {"kind": exponential|weibull|lognormal|gamma, **params}
+    topology  optional {"kind": "rack", "rack_size", "shock_mtbs_s",
+              "p_kill", "age_boost_s"} — correlated shock sampling over
+              the scenario's nodes (core.topology.rack_topology)
     run       n_runs, max_failures, and exactly one of makespan_s | work_s
     seed      int -> jax.random.PRNGKey(seed) at dispatch
 
@@ -140,12 +143,36 @@ def build_process(process_spec: Mapping) -> failures.FailureProcess:
 
 
 # ---------------------------------------------------------------------------
+# topology registry (correlated shocks — core.topology)
+# ---------------------------------------------------------------------------
+
+TOPOLOGY_KEYS = ("kind", "rack_size", "shock_mtbs_s", "p_kill", "age_boost_s")
+
+
+def build_topology(topology_spec: Mapping, n_nodes: int):
+    """Resolve a ``{"kind": "rack", ...}`` spec to a ``core.topology.
+    Topology`` over the scenario's ``n_nodes`` (the node count lives with
+    the scenario, so topology specs stay scenario-portable)."""
+    from repro.core import topology as node_topology
+
+    t = dict(topology_spec)
+    kind = t.pop("kind", None)
+    if kind != "rack":
+        raise ValueError(f"unknown topology kind {kind!r}; known: ['rack']")
+    return node_topology.rack_topology(
+        n_nodes, int(t.pop("rack_size")),
+        shock_mtbs_s=float(t.pop("shock_mtbs_s")),
+        p_kill=float(t.pop("p_kill", 1.0)),
+        age_boost_s=float(t.pop("age_boost_s", 0.0)))
+
+
+# ---------------------------------------------------------------------------
 # fragments, axes, matrices
 # ---------------------------------------------------------------------------
 
 POLICY_KNOBS = ("ckpt_interval", "mu1", "mu2", "wait_mode",
                 "move_ahead_frac", "move_ahead")
-TOP_KEYS = ("scenario", "policy", "process", "run", "seed")
+TOP_KEYS = ("scenario", "policy", "process", "topology", "run", "seed")
 RUN_KEYS = ("n_runs", "max_failures", "makespan_s", "work_s")
 
 
@@ -302,6 +329,23 @@ def normalize_config(config: Mapping) -> dict:
         for k, v in process.items()}
     build_process(out["process"])      # parameter validation
 
+    topology = config.get("topology")
+    if topology is not None:
+        bad = sorted(set(topology) - set(TOPOLOGY_KEYS))
+        if bad:
+            raise ValueError(
+                f"unknown topology keys {bad}; allowed: {TOPOLOGY_KEYS}")
+        t = {}
+        for k, v in topology.items():
+            if k == "kind":
+                t[k] = str(v)
+            elif k == "rack_size":
+                t[k] = int(_norm_scalar(f"topology.{k}", v))
+            else:
+                t[k] = float(_norm_scalar(f"topology.{k}", v))
+        build_topology(t, max(t.get("rack_size", 1), 2))  # kind/param check
+        out["topology"] = t
+
     run = config.get("run")
     if not isinstance(run, Mapping):
         raise ValueError("cell needs run: {n_runs, max_failures, "
@@ -401,6 +445,7 @@ class ResolvedExperiment:
     max_failures: int
     makespan_s: float
     seed: int
+    topology: Optional[object] = None  # core.topology.Topology (correlated)
 
 
 def resolve(config: Mapping) -> ResolvedExperiment:
@@ -418,7 +463,11 @@ def resolve(config: Mapping) -> ResolvedExperiment:
             run["work_s"], cfg.ckpt_interval, cfg.ckpt_duration))
     else:
         makespan = run["makespan_s"]
+    topo_spec = config.get("topology")
+    topo = None
+    if topo_spec is not None:
+        topo = build_topology(topo_spec, len(cfg.survivors) + 1)
     return ResolvedExperiment(
         cfg=cfg, process=proc, n_runs=run["n_runs"],
         max_failures=run["max_failures"], makespan_s=makespan,
-        seed=config["seed"])
+        seed=config["seed"], topology=topo)

@@ -14,7 +14,8 @@ property-tests both directions).
 Layout on disk::
 
     <root>/
-      index.json            {"version", "engine", "cells": {key: shard}}
+      index.json            {"version", "engine", "checksum",
+                             "cells": {key: shard}}
       bench.json            optional benchmark rows (check_regression reads)
       shards/cells-00000.jsonl   one JSON record per line
 
@@ -78,6 +79,14 @@ class ResultStore:
     def _load(self) -> None:
         if not self.shards_dir.is_dir():
             return
+        self._load_shards()
+        if not self._index_valid():
+            # missing, torn, stale, or hand-mangled index.json: the shards
+            # are the source of truth, so rebuild the view instead of
+            # trusting (or crashing on) the acceleration file
+            self._write_index()
+
+    def _load_shards(self) -> None:
         for shard in sorted(self.shards_dir.glob("cells-*.jsonl")):
             n = 0
             with open(shard) as f:
@@ -95,6 +104,22 @@ class ResultStore:
                     self._shard_of[rec["key"]] = shard.name
                     n += 1
             self._n_lines[shard.name] = n
+
+    def _cells_checksum(self) -> str:
+        return hashlib.sha256(canonical_json(
+            dict(sorted(self._shard_of.items()))).encode()).hexdigest()
+
+    def _index_valid(self) -> bool:
+        """Does index.json agree with what the shards actually hold?"""
+        try:
+            idx = json.loads(self.index_path.read_text())
+        except (OSError, json.JSONDecodeError):
+            return False
+        return (isinstance(idx, dict)
+                and idx.get("version") == 1
+                and idx.get("engine") == ENGINE_VERSION
+                and idx.get("cells") == dict(sorted(self._shard_of.items()))
+                and idx.get("checksum") == self._cells_checksum())
 
     # -- queries ----------------------------------------------------------
 
@@ -153,6 +178,7 @@ class ResultStore:
         self.root.mkdir(parents=True, exist_ok=True)
         _atomic_write(self.index_path, json.dumps(
             {"version": 1, "engine": ENGINE_VERSION,
+             "checksum": self._cells_checksum(),
              "cells": dict(sorted(self._shard_of.items()))}, indent=1))
 
     # -- benchmark rows (the regression gate's view of a store) -----------

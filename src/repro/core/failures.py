@@ -616,24 +616,61 @@ def fit_weibull(gaps, iters: int = 200, censored=None) -> tuple:
     With ``censored=None`` (or empty) both reduce to the complete-sample
     formulas above, bit for bit.  Non-positive censored entries are
     dropped (a zero age carries no information).
+
+    Degenerate inputs get a documented fallback instead of NaN (the burst
+    detector feeds this short, sometimes pathological windows):
+
+      * no complete gaps, no censored mass — ``ValueError`` (nothing to
+        fit); any *non-positive* complete gap is also a ``ValueError``
+        (corrupt input, not a small sample);
+      * all-censored (no complete gaps) — ``(1.0, sum(censored))``: the
+        exponential total-exposure bound with zero events;
+      * a single complete gap — ``(1.0, sum(t))``: the exponential MLE,
+        the one-parameter family a one-event sample can support;
+      * zero spread (all observations equal — the fixed point diverges
+        upward) — the shape saturates at ``k = 100`` and the scale comes
+        from the same k-moment, ~the common value.  The fixed-point
+        iteration itself is clamped to ``k in [1e-2, 1e2]`` and the
+        k-moment is evaluated in log-space, so heavy censoring or extreme
+        spread cannot overflow ``t**k``.
     """
     x = np.asarray(gaps, np.float64).ravel()
-    if x.size < 2 or np.any(x <= 0.0):
-        raise ValueError("need >= 2 positive gaps to fit")
+    if np.any(x <= 0.0):
+        raise ValueError("complete gaps must be positive")
     c = np.asarray([] if censored is None else censored, np.float64).ravel()
     c = c[c > 0.0]
+    if x.size == 0 and c.size == 0:
+        raise ValueError("need at least one positive gap or censored age")
+    if x.size == 0:
+        return 1.0, float(c.sum())
     t = np.concatenate([x, c])          # every observation carries t^k mass
     lt = np.log(t)
     ml = np.log(x).mean()               # only complete gaps carry ln-density
+
+    k_lo, k_hi = 1e-2, 1e2
+
+    def _scale(k: float) -> float:
+        # scale^k = sum(t^k) / n_complete, evaluated in log-space so large
+        # k (the zero-spread saturation) cannot overflow t**k
+        m = float(np.max(k * lt))
+        s = m + math.log(float(np.sum(np.exp(k * lt - m)))) - math.log(x.size)
+        return float(math.exp(s / k))
+
+    if x.size == 1 and c.size == 0:
+        return 1.0, float(t.sum())
+    if np.ptp(lt) < 1e-12:              # zero spread: fixed point diverges
+        return k_hi, _scale(k_hi)
     k = 1.0
     for _ in range(iters):
-        tk = t ** k
-        k_new = 1.0 / (np.sum(tk * lt) / np.sum(tk) - ml)
-        if not np.isfinite(k_new) or k_new <= 0.0:
+        tk = np.exp(np.clip(k * lt - np.max(k * lt), -745.0, 0.0))
+        denom = np.sum(tk * lt) / np.sum(tk) - ml
+        k_new = math.inf if denom <= 0.0 else 1.0 / denom
+        if not np.isfinite(k_new):
+            k = k_hi
             break
+        k_new = min(max(k_new, k_lo), k_hi)
         if abs(k_new - k) < 1e-12:
             k = k_new
             break
         k = k_new
-    scale = float((np.sum(t ** k) / x.size) ** (1.0 / k))
-    return float(k), scale
+    return float(k), _scale(float(k))

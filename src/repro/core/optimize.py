@@ -334,6 +334,7 @@ def evaluate_policy_grid(
     max_failures: int = 32,
     mtbf_s: Optional[float] = None,
     process: Optional[failures.FailureProcess] = None,
+    topology=None,
 ) -> PolicyEvalResult:
     """Expected whole-run energy AND makespan for every policy — one fused
     device dispatch (sampling shared across policies, scan, Algorithm 1,
@@ -359,7 +360,8 @@ def evaluate_policy_grid(
     stacked = policy_inputs(cfg, table)
     stats = jax.device_get(sweep.renewal_monte_carlo_policies(
         stacked, key, makespan_s=makespans, n_runs=n_runs,
-        max_failures=max_failures, process=proc, stats=True))
+        max_failures=max_failures, process=proc, stats=True,
+        topology=topology))
 
     f8 = lambda a: np.asarray(a, np.float64)
     energy_ref, energy_int = f8(stats.energy_ref), f8(stats.energy_int)
@@ -485,6 +487,7 @@ def cem_refine(
     max_failures: int = 32,
     mtbf_s: Optional[float] = None,
     process: Optional[failures.FailureProcess] = None,
+    topology=None,
     seed: int = 0,
     warm: Optional["CEMResult"] = None,
 ) -> CEMResult:
@@ -541,7 +544,8 @@ def cem_refine(
                 std[k] = max(float(prev["std"][k]), 0.02 * (hi - lo))
     rng = np.random.default_rng(seed)
     eval_kw = dict(work_s=work_s, makespan_s=makespan_s, n_runs=n_runs,
-                   max_failures=max_failures, mtbf_s=mtbf_s, process=process)
+                   max_failures=max_failures, mtbf_s=mtbf_s, process=process,
+                   topology=topology)
 
     score_of = lambda res: res.mean_energy_j + makespan_weight * res.mean_makespan_s
     incumbent = dict(init)
@@ -629,6 +633,7 @@ def optimize_policy(
     max_failures: int = 32,
     refine: bool = False,
     cem_kw: Optional[dict] = None,
+    topology=None,
 ) -> PolicyOptimum:
     """Tune the policy knobs for one scenario under one failure process.
 
@@ -649,7 +654,7 @@ def optimize_policy(
         table = default_policy_table(cfg, mtbf)
     res = evaluate_policy_grid(
         cfg, table, key, work_s=work_s, n_runs=n_runs,
-        max_failures=max_failures, process=proc)
+        max_failures=max_failures, process=proc, topology=topology)
     front = pareto_front(res.mean_energy_j, res.mean_makespan_s)
     knee = res.policy(knee_point(res.mean_energy_j, res.mean_makespan_s, front))
     best = res.policy(res.best)
@@ -666,7 +671,8 @@ def optimize_policy(
                 bounds = {"ckpt_interval": (
                     0.5 * best["ckpt_interval"], 2.0 * best["ckpt_interval"])}
         cem_args = dict(work_s=work_s, n_runs=n_runs,
-                        max_failures=max_failures, process=proc)
+                        max_failures=max_failures, process=proc,
+                        topology=topology)
         cem_args.update(kw)     # cem_kw overrides the grid-stage defaults
         cem = cem_refine(cfg, key, init=best, bounds=bounds, **cem_args)
         best = cem.best

@@ -289,7 +289,7 @@ def shift_failure(cfg: ScenarioConfig, delta: float) -> ScenarioConfig:
     )
 
 
-def post_recovery_anchor(exec_rem, period):
+def post_recovery_anchor(exec_rem, period, p_star=None):
     """Array form of the renewal re-anchor: next rendezvous after ``P*``.
 
     Given each survivor's remaining work ``exec_rem`` at the failure instant
@@ -301,15 +301,26 @@ def post_recovery_anchor(exec_rem, period):
     recursion (``sweep.renewal_compose``), and the device renewal scan
     (``sweep.renewal_compose_device``): numpy float64 and traced jnp inputs
     both work (``planning._ns`` dispatch).
+
+    ``p_star`` overrides the shared progress point (batch shape of
+    ``exec_rem`` minus the survivor axis).  Correlated multi-node epochs
+    use it: when a shock fells several nodes, the resync point is the max
+    over the *non-felled* survivors only (``sweep`` threads it through),
+    while felled survivors re-execute to that same point — their next
+    rendezvous still follows this closed form.  ``None`` keeps the
+    single-failure default ``max exec_rem``.
     """
     xp = planning._ns(exec_rem, period)
     exec_rem, period = xp.asarray(exec_rem), xp.asarray(period)
-    p_star = xp.max(exec_rem, axis=-1, keepdims=True)
+    if p_star is None:
+        p_star = xp.max(exec_rem, axis=-1, keepdims=True)
+    else:
+        p_star = xp.asarray(p_star)[..., None]
     gap = xp.mod(p_star - exec_rem, period)
     return xp.where(gap == 0.0, period, period - gap)
 
 
-def post_recovery_config(cfg: ScenarioConfig) -> ScenarioConfig:
+def post_recovery_config(cfg: ScenarioConfig, p_star=None) -> ScenarioConfig:
     """Re-anchor a scenario at the renewal point after its failure is handled.
 
     ``cfg`` is the system state at a failure instant (the original snapshot
@@ -336,6 +347,10 @@ def post_recovery_config(cfg: ScenarioConfig) -> ScenarioConfig:
     the first multiple of its period past ``P*`` (in ``(0, period]``).
     Chained blocking topologies are rejected — the renewal identity above
     assumes direct blockers (``peer == 0``), which all Table-4 scenarios are.
+
+    ``p_star`` overrides the resync progress point for correlated
+    multi-node epochs (see ``post_recovery_anchor``); felled survivors'
+    ``exec_to_rendezvous`` still re-anchor through the same closed form.
     """
     if any(sv.peer != 0 for sv in cfg.survivors):
         raise ValueError(
@@ -344,7 +359,9 @@ def post_recovery_config(cfg: ScenarioConfig) -> ScenarioConfig:
         )
     exec_rem = np.array([s.exec_to_rendezvous for s in cfg.survivors], np.float64)
     period = np.array([s.rendezvous_period for s in cfg.survivors], np.float64)
-    exec_next = post_recovery_anchor(exec_rem, period)
+    exec_next = post_recovery_anchor(
+        exec_rem, period,
+        p_star=None if p_star is None else np.float64(p_star))
     survivors = tuple(
         dataclasses.replace(
             sv,

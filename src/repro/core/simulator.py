@@ -469,10 +469,11 @@ class EpochRecord:
     t_renewal: float           # epoch duration T_E (failure -> last rendezvous)
     energy_ref: np.ndarray     # (N,) per-survivor epoch energy, reference run
     energy_int: np.ndarray     # (N,) per-survivor epoch energy, intervened run
-    energy_failed: float       # failed node energy over [0, T_E] (both runs)
+    energy_failed: float       # failed + felled node energy over [0, T_E]
     saving: np.ndarray         # (N,) energy_ref - energy_int
     levels: np.ndarray         # (N,) selected ladder levels
     wait_actions: list         # (N,) em.WaitAction
+    felled: Optional[np.ndarray] = None  # (N,) survivor slots also felled
 
 
 @dataclasses.dataclass
@@ -499,7 +500,8 @@ def _epoch_node_energy(segments, node: int, t_e: float, p_comp0: float):
 
 
 def simulate_run(cfg: ScenarioConfig, gaps, makespan_s: float, *,
-                 process=None, key=None, max_failures: int = 64) -> RunResult:
+                 process=None, key=None, max_failures: int = 64,
+                 felled=None, topology=None) -> RunResult:
     """Event-driven multi-failure renewal run (reference + intervened).
 
     ``gaps`` are balanced-execution wall seconds between each renewal anchor
@@ -525,8 +527,21 @@ def simulate_run(cfg: ScenarioConfig, gaps, makespan_s: float, *,
     engines use, so a process-driven event run is directly comparable to
     ``sweep.renewal_monte_carlo`` at ``n_runs=1``.
 
+    Correlated (multi-node) failure epochs: ``felled`` is a
+    ``(K, n_survivors)`` bool mask in *survivor-slot* space (the
+    ``sweep.renewal_compose`` convention — slot ``i`` of epoch ``k`` also
+    rolled back with the primary failure).  A shock epoch re-executes to
+    the *largest* lost work among the primary and every felled survivor
+    (all recoveries run concurrently at fa), the spared survivors
+    rendezvous against that stretched recovery, and each felled node's
+    epoch energy is the same restart + re-execution + serve-at-fa closed
+    form the failed node pays.  With a ``core.topology.Topology`` (and
+    ``gaps=None``) the history *and* the felled sets are drawn from the
+    correlated shock sampler instead.
+
     ``tests/test_renewal.py`` cross-validates this against the analytic
-    ``sweep.renewal_compose`` pointwise (per epoch, per node).
+    ``sweep.renewal_compose`` pointwise (per epoch, per node);
+    ``tests/test_topology.py`` does the same for shock epochs.
     """
     from repro.core.scenarios import failure_state_at, post_recovery_config, shift_failure
 
@@ -534,12 +549,24 @@ def simulate_run(cfg: ScenarioConfig, gaps, makespan_s: float, *,
         from repro.core import failures
         if process is None or key is None:
             raise ValueError("gaps=None requires a FailureProcess and a key")
-        gaps, _ = failures.renewal_gaps(
-            failures.as_process(process), key, 1, len(cfg.survivors) + 1,
-            max_failures)
-        gaps = gaps[0]
+        if topology is not None:
+            from repro.core import topology as node_topology
+            g, fm, pri = node_topology.correlated_renewal_gaps(
+                topology, failures.as_process(process), key, 1,
+                len(cfg.survivors) + 1, max_failures)
+            gaps = g[0]
+            felled = np.asarray(
+                node_topology.survivor_slot_mask(fm, pri))[0]
+        else:
+            gaps, _ = failures.renewal_gaps(
+                failures.as_process(process), key, 1,
+                len(cfg.survivors) + 1, max_failures)
+            gaps = gaps[0]
     elif process is not None:
         raise ValueError("pass explicit gaps OR a process, not both")
+    elif topology is not None:
+        raise ValueError("a topology needs gaps=None (it draws the history); "
+                         "pass explicit felled masks with explicit gaps")
 
     if any(sv.peer != 0 for sv in cfg.survivors):
         raise ValueError(
@@ -552,6 +579,11 @@ def simulate_run(cfg: ScenarioConfig, gaps, makespan_s: float, *,
     p_comp0, p_ckpt0 = float(pt.p_comp[0]), float(pt.p_ckpt[0])
     dur_fa = cfg.ckpt_duration * float(pt.gamma[0])
     n_nodes = len(cfg.survivors) + 1
+    n_survivors = len(cfg.survivors)
+    if felled is not None:
+        felled = np.broadcast_to(
+            np.asarray(felled, bool),
+            (np.asarray(gaps).shape[0], n_survivors))
 
     anchor = cfg
     t_anchor = 0.0       # wall clock (balanced spans + epochs + resync ckpts)
@@ -576,17 +608,62 @@ def simulate_run(cfg: ScenarioConfig, gaps, makespan_s: float, *,
                 age0, d_eff, anchor.ckpt_interval, anchor.ckpt_duration)
             balanced += float(w) * p_comp0 + float(ck) * p_ckpt0
 
-        ref = simulate(shifted, intervene=False)
-        act = simulate(shifted, intervene=True)
+        m = felled[k] if felled is not None else None
         exec_rem = np.array([sv.exec_to_rendezvous for sv in shifted.survivors])
-        t_e = shifted.t_recover + float(np.max(exec_rem))
-        e_ref = np.array([
-            _epoch_node_energy(ref.segments, i + 1, t_e, p_comp0)
-            for i in range(len(exec_rem))])
-        e_int = np.array([
-            _epoch_node_energy(act.segments, i + 1, t_e, p_comp0)
-            for i in range(len(exec_rem))])
-        e_failed = sum(s.energy for s in ref.segments if s.node == _FAILED)
+        if m is None or not m.any():
+            ref = simulate(shifted, intervene=False)
+            act = simulate(shifted, intervene=True)
+            t_e = shifted.t_recover + float(np.max(exec_rem))
+            e_ref = np.array([
+                _epoch_node_energy(ref.segments, i + 1, t_e, p_comp0)
+                for i in range(len(exec_rem))])
+            e_int = np.array([
+                _epoch_node_energy(act.segments, i + 1, t_e, p_comp0)
+                for i in range(len(exec_rem))])
+            e_failed = sum(s.energy for s in ref.segments if s.node == _FAILED)
+            levels = np.array([act.outcomes[i + 1].level
+                               for i in range(len(exec_rem))])
+            waits = [act.outcomes[i + 1].wait_action
+                     for i in range(len(exec_rem))]
+            p_star = None        # default re-anchor (max over exec_rem)
+        else:
+            # shock epoch: the felled survivors roll back alongside the
+            # primary; every recovery runs concurrently at fa, so the
+            # spared survivors rendezvous against the LARGEST lost work
+            keep = [i for i in range(n_survivors) if not m[i]]
+            ages_f = np.array([sv.ckpt_age for sv in shifted.survivors])
+            reexec_max = float(max(
+                [shifted.t_reexec] + [float(ages_f[i])
+                                      for i in np.nonzero(m)[0]]))
+            e_ref = np.zeros(n_survivors)
+            e_int = np.zeros(n_survivors)
+            levels = np.zeros(n_survivors, dtype=np.int64)
+            waits = [em.WaitAction.NONE] * n_survivors
+            if keep:
+                sub = dataclasses.replace(
+                    shifted,
+                    survivors=tuple(shifted.survivors[i] for i in keep),
+                    t_reexec=reexec_max)
+                ref = simulate(sub, intervene=False)
+                act = simulate(sub, intervene=True)
+                p_star = float(np.max(exec_rem[keep]))
+                t_e = sub.t_recover + p_star
+                for j, i in enumerate(keep):
+                    e_ref[i] = _epoch_node_energy(
+                        ref.segments, j + 1, t_e, p_comp0)
+                    e_int[i] = _epoch_node_energy(
+                        act.segments, j + 1, t_e, p_comp0)
+                    levels[i] = act.outcomes[j + 1].level
+                    waits[i] = act.outcomes[j + 1].wait_action
+                e_one = sum(s.energy for s in ref.segments
+                            if s.node == _FAILED)
+            else:
+                # every node rolled back: no rendezvous to serve, the
+                # epoch is restart + the longest re-execution
+                p_star = 0.0
+                t_e = shifted.t_down + shifted.t_restart + reexec_max
+                e_one = shifted.t_restart * p_ckpt0 + reexec_max * p_comp0
+            e_failed = (1.0 + int(m.sum())) * e_one
         # coordinated re-synchronization checkpoint at the renewal point
         balanced += n_nodes * dur_fa * p_ckpt0
 
@@ -601,14 +678,15 @@ def simulate_run(cfg: ScenarioConfig, gaps, makespan_s: float, *,
             energy_int=e_int,
             energy_failed=e_failed,
             saving=e_ref - e_int,
-            levels=np.array([act.outcomes[i + 1].level for i in range(len(exec_rem))]),
-            wait_actions=[act.outcomes[i + 1].wait_action for i in range(len(exec_rem))],
+            levels=levels,
+            wait_actions=waits,
+            felled=None if m is None else m.copy(),
         ))
         e_ref_total += float(e_ref.sum()) + e_failed
         e_int_total += float(e_int.sum()) + e_failed
         bal_elapsed += float(st.delta_eff_failed)
         t_anchor = t_fail + t_e + dur_fa
-        anchor = post_recovery_config(shifted)
+        anchor = post_recovery_config(shifted, p_star=p_star)
 
     # balanced tail: the rest of the failure-free work (mid-checkpoint snaps
     # can nudge bal_elapsed slightly past the makespan; clamp)

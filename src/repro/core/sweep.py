@@ -86,6 +86,7 @@ from repro.core import energy_model as em
 from repro.core import failures
 from repro.core import planning
 from repro.core import strategies
+from repro.core import topology as node_topology
 from repro.core.scenarios import post_recovery_anchor
 from repro.core.simulator import ScenarioConfig
 
@@ -596,6 +597,7 @@ def renewal_failure_gaps(
     max_failures: int,
     mtbf_s: Optional[float] = None,
     process: Optional[failures.FailureProcess] = None,
+    topology=None,
 ):
     """Per-node failure sequences, reduced to renewal-epoch gaps.
 
@@ -619,7 +621,20 @@ def renewal_failure_gaps(
     with and without x64 enabled, so the host oracle and the device engine
     (``renewal_monte_carlo_device``, which samples inside its jitted
     program) see *bit-identical* failure histories for the same key.
+
+    A ``core.topology.Topology`` switches to the correlated shock sampler
+    and the return becomes the *triple* ``(gaps, failed_node, failed_mask)``
+    — ``failed_mask`` ((n_runs, max_failures, n_nodes) bool) marks every
+    node felled per epoch (a shock fells several at once) and
+    ``failed_node`` is the primary; map the mask to survivor slots with
+    ``topology.survivor_slot_mask`` before feeding ``renewal_compose``'s
+    ``felled``.  Same bit-identity contract as the iid path.
     """
+    if topology is not None:
+        gaps, fmask, primary = node_topology.correlated_renewal_gaps(
+            topology, failures.as_process(process, mtbf_s), key, n_runs,
+            n_nodes, max_failures)
+        return gaps, primary, fmask
     if process is not None and not isinstance(process, failures.Exponential):
         return failures.renewal_gaps(
             failures.as_process(process, mtbf_s), key, n_runs, n_nodes,
@@ -638,7 +653,7 @@ def renewal_failure_gaps(
 
 
 def renewal_compose(cfg: ScenarioConfig, gaps, makespan_s: float,
-                    failed_node=None) -> RenewalResult:
+                    failed_node=None, felled=None) -> RenewalResult:
     """Compose whole-run multi-failure energy analytically.
 
     ``gaps`` (R, K) or (K,) are balanced-execution wall seconds between each
@@ -673,6 +688,16 @@ def renewal_compose(cfg: ScenarioConfig, gaps, makespan_s: float,
     This is the float64 host oracle; ``renewal_compose_device`` is the
     fused scan over epochs x runs x scenarios that replaces it on the hot
     path.
+
+    ``felled`` ((R, K, N) bool over survivor slots, or None) marks slots
+    additionally felled per epoch — the correlated-shock extension
+    (``core.topology``; build it with ``topology.survivor_slot_mask`` from
+    the sampler's physical-node mask).  Felled slots join the primary's
+    recovery (max lost work governs the re-execution, the resync point is
+    the furthest *non-felled* survivor, each felled node pays the
+    failed-node closed form) and are excluded from the survivor window
+    energies; all formulas reduce exactly to the single-failure path for
+    an all-False mask.
     """
     _check_renewal_config(cfg)
     ages0 = np.array([s.ckpt_age for s in cfg.survivors], np.float64)
@@ -680,6 +705,10 @@ def renewal_compose(cfg: ScenarioConfig, gaps, makespan_s: float,
     gaps = np.atleast_2d(np.asarray(gaps, np.float64))            # (R, K)
     n_runs, max_failures = gaps.shape
     n = len(cfg.survivors)
+    if felled is None:
+        felled = np.zeros((n_runs, max_failures, n), bool)
+    felled = np.broadcast_to(np.asarray(felled, bool),
+                             (n_runs, max_failures, n))
     pt = cfg.profile.power_table
     p_comp0, p_ckpt0 = float(pt.p_comp[0]), float(pt.p_ckpt[0])
     beta0, gamma0 = float(pt.beta[0]), float(pt.gamma[0])
@@ -724,6 +753,12 @@ def renewal_compose(cfg: ScenarioConfig, gaps, makespan_s: float,
         exec_rem = np.where(rem == 0.0, period, rem)
         reexec_f, _, _, d_eff_fail = planning.advance_checkpoint_sawtooth(
             reexec_age, delta, interval, dur)                    # (R,)
+        m_k = felled[:, k]                                       # (R, N)
+        # felled survivors' lost work joins the re-execution race; the
+        # resync point is the furthest non-felled survivor (both reduce
+        # exactly to the old formulas for an all-False mask)
+        reexec_f = np.maximum(
+            reexec_f, np.max(np.where(m_k, age_f, -np.inf), axis=-1))
         t_recover = cfg.t_down + cfg.t_restart + reexec_f
         t_failed = t_recover[:, None] + exec_rem
 
@@ -738,12 +773,16 @@ def renewal_compose(cfg: ScenarioConfig, gaps, makespan_s: float,
             exec_rem, age_f, t_failed,
             interval=interval, dur=dur, beta=pt.beta, gamma=pt.gamma,
             move_ahead=cfg.move_ahead, move_frac=cfg.move_ahead_frac)
-        p_star = exec_rem.max(axis=-1)
+        p_star = np.maximum(
+            np.max(np.where(m_k, -np.inf, exec_rem), axis=-1), 0.0)
         t_e = t_recover + p_star
         # failed node over [failure, T_E]: down (0 W) + restart at P_ckpt +
-        # re-execution and post-recovery serving at P_comp
+        # re-execution and post-recovery serving at P_comp; every felled
+        # slot pays the same closed form (identical in both runs)
         epoch_failed[:, k] = np.where(
-            occurs, cfg.t_restart * p_ckpt0 + (reexec_f + p_star) * p_comp0, 0.0)
+            occurs,
+            (1.0 + m_k.sum(axis=-1))
+            * (cfg.t_restart * p_ckpt0 + (reexec_f + p_star) * p_comp0), 0.0)
 
         valid[:, k] = occurs
         t_fail[:, k] = np.where(occurs, t_anchor + d_eff_fail, 0.0)
@@ -754,7 +793,7 @@ def renewal_compose(cfg: ScenarioConfig, gaps, makespan_s: float,
         ct_ref_k[:, k] = exec_rem * beta0 + np.asarray(plan.n_ckpt)[..., 0] * dur * gamma0
 
         # re-anchor: coordinated resync checkpoint -> ages 0, progress P*
-        exec_next = post_recovery_anchor(exec_rem, period)
+        exec_next = post_recovery_anchor(exec_rem, period, p_star=p_star)
         exec_anchor = np.where(occurs[:, None], exec_next, exec_anchor)
         ages = np.where(occurs[:, None], 0.0, ages)
         reexec_age = np.where(occurs, 0.0, reexec_age)
@@ -790,7 +829,9 @@ def renewal_compose(cfg: ScenarioConfig, gaps, makespan_s: float,
     t_e3 = t_renewal_k[:, :, None]
     trail_ref = np.maximum(t_e3 - np.maximum(t_failed_k, ct_ref_k), 0.0) * p_comp0
     trail_int = np.maximum(t_e3 - np.maximum(t_failed_k, ct_sel), 0.0) * p_comp0
-    v3 = valid[:, :, None]
+    # felled slots are accounted through epoch_failed's closed form, not
+    # the survivor window energies
+    v3 = valid[:, :, None] & ~felled
     epoch_ref = np.where(v3, eni + trail_ref, 0.0)
     epoch_int = np.where(v3, ei + trail_int, 0.0)
 
@@ -907,7 +948,7 @@ jax.tree_util.register_dataclass(
 
 
 def _renewal_scan(inp: SweepInputs, gaps: jax.Array, makespan_s,
-                  stats: bool = False):
+                  stats: bool = False, felled=None):
     """Whole-run renewal recursion for ONE scenario x ONE run as a
     ``lax.scan`` over failure epochs.
 
@@ -930,6 +971,17 @@ def _renewal_scan(inp: SweepInputs, gaps: jax.Array, makespan_s,
     leave the program (the arrays dominate wall time at small batch sizes
     — they are pure output traffic, the decisions are computed either
     way).
+
+    ``felled`` (optional, (K, N) bool over survivor *slots*) marks slots
+    additionally felled in each epoch — the correlated-shock extension
+    (``core.topology``).  Felled slots join the primary's recovery: the
+    epoch's re-execution is the max lost work over all felled nodes, the
+    resync point ``P*`` is the max ``exec_rem`` over the *non-felled*
+    survivors, each felled node's epoch energy is the failed-node closed
+    form, and felled slots are excluded from decisions/energies/counts.
+    ``None`` (or an all-False mask — the formulas reduce through exact
+    neutral elements) is the single-failure path, bit-identical to the
+    pre-correlation engine.
     """
     n = inp.period.shape[0]
     n_nodes = n + 1
@@ -955,10 +1007,14 @@ def _renewal_scan(inp: SweepInputs, gaps: jax.Array, makespan_s,
     # stacked (K, ...) epoch states, where XLA vectorizes it across the
     # whole epochs x runs x scenarios grid instead of re-issuing it inside
     # a 32-step sequential loop.
-    def step(carry, delta):
+    m_all = (jnp.zeros(gaps.shape + (n,), bool) if felled is None
+             else jnp.asarray(felled, bool))
+
+    def step(carry, xs):
         # ages_all stacks the survivors' checkpoint ages with the failed
         # node's lost-work age (the same sawtooth governs both), so one
         # closed-form advance serves all N+1 nodes per step.
+        delta, m = xs
         ages_all, exec_anchor, bal_elapsed, t_anchor, alive = carry
         occurs = alive & (bal_elapsed + delta <= makespan)
         age_all, work, _, d_eff_all = planning.advance_checkpoint_sawtooth(
@@ -966,12 +1022,21 @@ def _renewal_scan(inp: SweepInputs, gaps: jax.Array, makespan_s,
         rem = jnp.mod(exec_anchor - work[:-1], period)
         exec_rem = jnp.where(rem == 0.0, period, rem)
         d_eff_fail = d_eff_all[-1]
-        t_e = t_dr + age_all[-1] + jnp.max(exec_rem)             # epoch span T_E
+        # felled survivors' lost work joins the re-execution race; the
+        # resync point is the furthest non-felled survivor (neutral for an
+        # all-False mask: reexec = failed age, p_star = max exec_rem)
+        reexec = jnp.maximum(
+            age_all[-1], jnp.max(jnp.where(m, age_all[:-1], -jnp.inf)))
+        p_star = jnp.maximum(
+            jnp.max(jnp.where(m, -jnp.inf, exec_rem)), 0.0)
+        t_e = t_dr + reexec + p_star                             # epoch span T_E
 
         # re-anchor: coordinated resync checkpoint -> ages 0, progress P*
         new_carry = (
             jnp.where(occurs, 0.0, ages_all),
-            jnp.where(occurs, post_recovery_anchor(exec_rem, period), exec_anchor),
+            jnp.where(occurs,
+                      post_recovery_anchor(exec_rem, period, p_star=p_star),
+                      exec_anchor),
             jnp.where(occurs, bal_elapsed + d_eff_fail, bal_elapsed),
             jnp.where(occurs, t_anchor + d_eff_fail + t_e + dur_fa, t_anchor),
             alive & occurs,
@@ -982,18 +1047,23 @@ def _renewal_scan(inp: SweepInputs, gaps: jax.Array, makespan_s,
 
     init = (jnp.concatenate([f8(inp.age0), f8(inp.reexec0)[None]]),
             f8(inp.exec_rem0), f8(0.0), f8(0.0), jnp.asarray(True))
-    carry, ys = jax.lax.scan(step, init, f8(gaps))
+    carry, ys = jax.lax.scan(step, init, (f8(gaps), m_all))
     ages_all, exec_anchor, bal_elapsed, t_anchor, alive = carry
     (valid, age_all, work_all, exec_rem_k, d_eff_all), t_fail = \
         ys[:5], (None if stats else ys[5])
 
     # --- per-epoch accounting, vectorized over the stacked epochs ----------
     age_f = age_all[..., :-1]                                    # (K, N)
-    reexec_f = age_all[..., -1]                                  # (K,)
+    # felled survivors' lost work joins the re-execution race (neutral for
+    # the all-False mask — see the step comment)
+    reexec_f = jnp.maximum(
+        age_all[..., -1],
+        jnp.max(jnp.where(m_all, age_f, -jnp.inf), axis=-1))     # (K,)
     d_eff_fail = d_eff_all[..., -1]
     t_recover = t_dr + reexec_f                                  # (K,)
     t_failed_k = t_recover[..., None] + exec_rem_k               # (K, N)
-    p_star = jnp.max(exec_rem_k, axis=-1)
+    p_star = jnp.maximum(
+        jnp.max(jnp.where(m_all, -jnp.inf, exec_rem_k), axis=-1), 0.0)
     t_e = t_recover + p_star
 
     # balanced span energy up to each node's (snapped) failure instant,
@@ -1008,9 +1078,14 @@ def _renewal_scan(inp: SweepInputs, gaps: jax.Array, makespan_s,
         valid, e_bal + n_nodes * dur_fa * p_ckpt0, 0.0))
 
     # failed node over [failure, T_E]: down (0 W) + restart at P_ckpt +
-    # re-execution and post-recovery serving at P_comp
+    # re-execution and post-recovery serving at P_comp.  Every felled slot
+    # plays the same closed-form role (identical in reference and
+    # intervened runs, so the saving is untouched); the factor is 1 for the
+    # single-failure path.
     epoch_failed = jnp.where(
-        valid, t_restart * p_ckpt0 + (reexec_f + p_star) * p_comp0, 0.0)
+        valid,
+        (1.0 + jnp.sum(m_all, axis=-1))
+        * (t_restart * p_ckpt0 + (reexec_f + p_star) * p_comp0), 0.0)
 
     # per-level checkpoint plan as F separate node-batch columns: the fa
     # column comes from the shared checkpoint_plan (it also decides the
@@ -1037,7 +1112,9 @@ def _renewal_scan(inp: SweepInputs, gaps: jax.Array, makespan_s,
     trail_ref = jnp.maximum(t_e2 - jnp.maximum(t_failed_k, ct_ref), 0.0) * p_comp0
     trail_int = jnp.maximum(
         t_e2 - jnp.maximum(t_failed_k, f8(decision.comp_time)), 0.0) * p_comp0
-    v2 = valid[..., None]
+    # felled slots are accounted through epoch_failed's closed form, not the
+    # survivor window energies (their Algorithm-1 point is meaningless)
+    v2 = valid[..., None] & ~m_all
     epoch_ref = jnp.where(v2, f8(decision.energy_reference) + trail_ref, 0.0)
     epoch_int = jnp.where(v2, f8(decision.energy_intervened) + trail_int, 0.0)
 
@@ -1067,7 +1144,7 @@ def _renewal_scan(inp: SweepInputs, gaps: jax.Array, makespan_s,
         i32 = lambda m: jnp.sum((v2 & m).astype(jnp.int32))
         return dict(
             common,
-            n_points=jnp.sum(valid.astype(jnp.int32)) * n,
+            n_points=jnp.sum(v2.astype(jnp.int32)),
             n_sleep=i32(decision.wait_action == em.WaitAction.SLEEP),
             n_min_freq=i32(decision.wait_action == em.WaitAction.MIN_FREQ),
             n_comp_changed=i32(decision.comp_changed),
@@ -1087,45 +1164,65 @@ def _renewal_scan(inp: SweepInputs, gaps: jax.Array, makespan_s,
 
 
 def _renewal_device_core(inp: SweepInputs, gaps: jax.Array, makespan_s,
-                         stats: bool = False):
+                         stats: bool = False, felled=None):
     """vmap the per-run scan over runs (gaps axis 0) and stacked scenarios
     (inputs axis 0): the whole epochs x runs x scenarios composition is one
-    XLA program."""
-    scan = lambda i, g, m: _renewal_scan(i, g, m, stats=stats)
-    over_runs = jax.vmap(scan, in_axes=(None, 0, None))
-    return jax.vmap(over_runs, in_axes=(0, None, None))(inp, gaps, makespan_s)
+    XLA program.  ``felled`` ((R, K, N) survivor-slot mask or None) rides
+    the run axis."""
+    scan = lambda i, g, m, f: _renewal_scan(i, g, m, stats=stats, felled=f)
+    over_runs = jax.vmap(scan, in_axes=(None, 0, None, 0))
+    return jax.vmap(over_runs, in_axes=(0, None, None, None))(
+        inp, gaps, makespan_s, felled)
 
 
-def _attach_failed_counts(out: dict, failed: jax.Array, n_nodes: int) -> dict:
+def _attach_failed_counts(out: dict, failed: jax.Array, n_nodes: int,
+                          fmask=None) -> dict:
     """stats-mode epilogue shared by the scenario- and policy-stacked MC
     cores: per-node failure counts over valid epochs, reduced over runs.
     ``out['valid']`` is (S|P, R, K); the leading axis broadcasts the same
-    way for scenario and policy stacks."""
-    hit = out.pop("valid")[..., None] & (
-        failed[None, ..., None] == jnp.arange(n_nodes)[None, None, None])
+    way for scenario and policy stacks.  With a correlated sampler's
+    physical-node ``fmask`` ((R, K, n_nodes)) every felled node counts, not
+    just the primary."""
+    valid = out.pop("valid")
+    if fmask is None:
+        hit = valid[..., None] & (
+            failed[None, ..., None] == jnp.arange(n_nodes)[None, None, None])
+    else:
+        hit = valid[..., None] & fmask[None]
     out["failed_counts"] = jnp.sum(hit.astype(jnp.int32), axis=(1, 2))
     return out
 
 
 def _renewal_mc_core(inp: SweepInputs, key: jax.Array, makespan_s, process,
-                     n_runs: int, max_failures: int, stats: bool = False):
+                     n_runs: int, max_failures: int, stats: bool = False,
+                     topology=None):
     """Fused Monte-Carlo entry: gap sampling (``renewal_failure_gaps``
     semantics — float32 draws and inverse-CDF transforms via
     ``failures.sample_renewal_gaps``, so histories are bit-identical to the
     host sampler; non-exponential processes run the conditional-residual
-    scan) + the full composition, one jitted program."""
+    scan) + the full composition, one jitted program.  With a
+    ``core.topology.Topology`` the sampler is the correlated shock scan
+    (``topology.sample_correlated_renewal_gaps`` — same bit-identity
+    contract) and the felled slots thread into the composition."""
     n_nodes = inp.period.shape[-1] + 1
-    gaps32, failed = failures.sample_renewal_gaps(
-        process, key, n_runs, max_failures, n_nodes)
+    if topology is None:
+        gaps32, failed = failures.sample_renewal_gaps(
+            process, key, n_runs, max_failures, n_nodes)
+        felled = fmask = None
+    else:
+        gaps32, fmask, failed = node_topology.sample_correlated_renewal_gaps(
+            topology, process, key, n_runs, max_failures, n_nodes)
+        felled = node_topology.survivor_slot_mask(fmask, failed)
     gaps = gaps32.astype(jnp.float64)
-    out = _renewal_device_core(inp, gaps, makespan_s, stats=stats)
+    out = _renewal_device_core(inp, gaps, makespan_s, stats=stats,
+                               felled=felled)
     if stats:
-        out = _attach_failed_counts(out, failed, n_nodes)
+        out = _attach_failed_counts(out, failed, n_nodes, fmask=fmask)
     return out, gaps, failed
 
 
 def _renewal_policy_core(inp: SweepInputs, gaps: jax.Array, makespan_s,
-                         stats: bool = False):
+                         stats: bool = False, felled=None):
     """The policy-axis analog of ``_renewal_device_core``: vmap the per-run
     scan over runs and over a *policy-stacked* ``SweepInputs`` whose leading
     axis varies the knobs (``interval``, ``mu1``, ``mu2``, ``wait_mode``,
@@ -1137,26 +1234,36 @@ def _renewal_policy_core(inp: SweepInputs, gaps: jax.Array, makespan_s,
     and per-policy outputs are bit-identical to a standalone
     ``_renewal_device_core`` call on that policy alone (tests/test_optimize.py
     pins this)."""
-    scan = lambda i, g, m: _renewal_scan(i, g, m, stats=stats)
-    over_runs = jax.vmap(scan, in_axes=(None, 0, None))
-    return jax.vmap(over_runs, in_axes=(0, None, 0))(inp, gaps, makespan_s)
+    scan = lambda i, g, m, f: _renewal_scan(i, g, m, stats=stats, felled=f)
+    over_runs = jax.vmap(scan, in_axes=(None, 0, None, 0))
+    return jax.vmap(over_runs, in_axes=(0, None, 0, None))(
+        inp, gaps, makespan_s, felled)
 
 
 def _renewal_policy_mc_core(inp: SweepInputs, key: jax.Array, makespan_s,
                             process, n_runs: int, max_failures: int,
-                            stats: bool = False):
+                            stats: bool = False, topology=None):
     """Fused policy-grid Monte-Carlo: ONE gap-sampling pass (identical to
     ``_renewal_mc_core``'s — same key, same draws) shared across every
     policy lane, then the policy-vmapped composition.  This is the common-
     random-numbers plumbing: the sampler never sees the policy axis, so the
-    histories cannot depend on the knobs being tuned."""
+    histories cannot depend on the knobs being tuned.  A
+    ``core.topology.Topology`` swaps in the correlated shock sampler; the
+    shared histories (and felled masks) stay policy-independent."""
     n_nodes = inp.period.shape[-1] + 1
-    gaps32, failed = failures.sample_renewal_gaps(
-        process, key, n_runs, max_failures, n_nodes)
+    if topology is None:
+        gaps32, failed = failures.sample_renewal_gaps(
+            process, key, n_runs, max_failures, n_nodes)
+        felled = fmask = None
+    else:
+        gaps32, fmask, failed = node_topology.sample_correlated_renewal_gaps(
+            topology, process, key, n_runs, max_failures, n_nodes)
+        felled = node_topology.survivor_slot_mask(fmask, failed)
     gaps = gaps32.astype(jnp.float64)
-    out = _renewal_policy_core(inp, gaps, makespan_s, stats=stats)
+    out = _renewal_policy_core(inp, gaps, makespan_s, stats=stats,
+                               felled=felled)
     if stats:
-        out = _attach_failed_counts(out, failed, n_nodes)
+        out = _attach_failed_counts(out, failed, n_nodes, fmask=fmask)
     return out, gaps, failed
 
 
@@ -1170,20 +1277,24 @@ _renewal_policy_mc_jit = jax.jit(
     _renewal_policy_mc_core, static_argnames=("n_runs", "max_failures", "stats"))
 
 
-def renewal_compose_policies(stacked: SweepInputs, gaps, makespan_s):
+def renewal_compose_policies(stacked: SweepInputs, gaps, makespan_s,
+                             felled=None):
     """Compose explicit failure histories for a policy-stacked scenario.
 
     ``stacked`` is a policy-stacked float64 ``SweepInputs`` (leading policy
     axis P over the knob leaves — build it with ``core.optimize.
     policy_inputs``), ``makespan_s`` a (P,) per-policy wall makespan, and
-    ``gaps`` (R, K) or (K,) histories shared by every policy (CRN).  One
-    jitted dispatch; returns a ``RenewalDeviceResult`` whose leading axis is
-    the policy axis.
+    ``gaps`` (R, K) or (K,) histories shared by every policy (CRN).
+    ``felled`` ((R, K, N) survivor-slot mask — see ``renewal_compose``) is
+    likewise shared across policies.  One jitted dispatch; returns a
+    ``RenewalDeviceResult`` whose leading axis is the policy axis.
     """
     with enable_x64():
         gaps = jnp.atleast_2d(jnp.asarray(np.asarray(gaps, np.float64)))
         makespan = jnp.asarray(np.asarray(makespan_s, np.float64))
-        out = _renewal_policy_jit(stacked, gaps, makespan)
+        if felled is not None:
+            felled = jnp.asarray(np.asarray(felled, bool))
+        out = _renewal_policy_jit(stacked, gaps, makespan, felled=felled)
         return _wrap_device_result(out, gaps, None)
 
 
@@ -1197,6 +1308,7 @@ def renewal_monte_carlo_policies(
     mtbf_s: Optional[float] = None,
     process: Optional[failures.FailureProcess] = None,
     stats: bool = True,
+    topology=None,
 ):
     """Whole-run Monte-Carlo over a policy grid — one fused dispatch.
 
@@ -1214,14 +1326,17 @@ def renewal_monte_carlo_policies(
     ``stats=True`` (default — the optimizer's hot path) returns the lean
     ``RenewalDeviceStats``; ``stats=False`` the full per-epoch
     ``RenewalDeviceResult``.  Leading axis of every field is the policy
-    axis.
+    axis.  ``topology`` (a ``core.topology.Topology``) swaps in the
+    correlated shock sampler — histories and felled masks stay shared
+    across policies (CRN holds for the correlated family too).
     """
     proc = failures.as_process(process, mtbf_s)
     with enable_x64():
         makespan = jnp.asarray(np.asarray(makespan_s, np.float64))
         out, gaps, failed = _renewal_policy_mc_jit(
             stacked, key, makespan, proc,
-            n_runs=n_runs, max_failures=max_failures, stats=stats)
+            n_runs=n_runs, max_failures=max_failures, stats=stats,
+            topology=topology)
         if stats:
             return _wrap_device_stats(out)
         return _wrap_device_result(out, gaps, failed)
@@ -1309,22 +1424,27 @@ def _wrap_device_stats(out: dict) -> RenewalDeviceStats:
 
 
 def renewal_compose_device(cfgs, gaps, makespan_s: float,
-                           failed_node=None) -> RenewalDeviceResult:
+                           failed_node=None, felled=None) -> RenewalDeviceResult:
     """Compose whole-run multi-failure energy on device for explicit
     failure histories.
 
     The device analog of ``renewal_compose``: ``cfgs`` is one
     ``ScenarioConfig`` or a sequence sharing survivor count and ladder size
     (the Table-4 six); ``gaps`` is (R, K) or (K,) balanced-execution wall
-    seconds, shared across scenarios.  One jitted scan-over-epochs program
-    evaluates every (scenario, run, epoch, survivor) point; semantics —
-    occurrence, truncation, re-anchoring, energy accounting — match the
-    host float64 oracle at ~1e-9 relative (tests/test_renewal_device.py).
+    seconds, shared across scenarios.  ``felled`` ((R, K, N) survivor-slot
+    mask or None) is the correlated multi-node extension — semantics as
+    ``renewal_compose``.  One jitted scan-over-epochs program evaluates
+    every (scenario, run, epoch, survivor) point; semantics — occurrence,
+    truncation, re-anchoring, energy accounting — match the host float64
+    oracle at ~1e-9 relative (tests/test_renewal_device.py).
     """
     with enable_x64():
         cfg_list, stacked = _renewal_device_inputs(cfgs)
         gaps = jnp.atleast_2d(jnp.asarray(np.asarray(gaps, np.float64)))
-        out = _renewal_device_jit(stacked, gaps, float(makespan_s))
+        if felled is not None:
+            felled = jnp.asarray(np.asarray(felled, bool))
+        out = _renewal_device_jit(stacked, gaps, float(makespan_s),
+                                  felled=felled)
         return _wrap_device_result(out, gaps, failed_node)
 
 
@@ -1338,6 +1458,7 @@ def renewal_monte_carlo_device(
     max_failures: int = 64,
     stats: bool = False,
     process: Optional[failures.FailureProcess] = None,
+    topology=None,
 ):
     """Whole-run Monte-Carlo with gap sampling fused into the device program.
 
@@ -1355,13 +1476,20 @@ def renewal_monte_carlo_device(
     returns the lean ``RenewalDeviceStats`` (whole-run energies + integer
     action counts), the production hot path: at the benchmark's default
     shape the diagnostic arrays are most of the wall time.
+
+    ``topology`` (a ``core.topology.Topology`` over the scenario's
+    ``n_nodes``) swaps the sampler for the correlated shock scan and
+    threads the felled slots through the composition — still one fused
+    program, bit-identical histories to the host oracle's
+    ``renewal_failure_gaps(..., topology=...)``.
     """
     proc = failures.as_process(process, mtbf_s)
     with enable_x64():
         cfg_list, stacked = _renewal_device_inputs(cfgs)
         out, gaps, failed = _renewal_mc_jit(
             stacked, key, float(makespan_s), proc,
-            n_runs=n_runs, max_failures=max_failures, stats=stats)
+            n_runs=n_runs, max_failures=max_failures, stats=stats,
+            topology=topology)
         if stats:
             return _wrap_device_stats(out)
         return _wrap_device_result(out, gaps, failed)
@@ -1466,17 +1594,30 @@ def _renewal_summary(
     makespan_s: float,
     mtbf_s: float,
     max_failures: int,
+    felled=None,
+    fmask=None,
 ) -> RenewalMonteCarloSummary:
     """Reduce one scenario's (R, K[, N]) host-oracle arrays to expectations
     (rates as means over valid decision points; assembly shared with the
-    device path via ``_assemble_summary``)."""
+    device path via ``_assemble_summary``).  ``felled`` (survivor-slot
+    mask) excludes felled slots from the action-occupancy points; ``fmask``
+    (physical-node mask) attributes every felled node in ``per_node`` —
+    both mirror what the device path's integer counts do."""
     valid = np.asarray(valid, bool)
     counts = valid.sum(axis=1)
     failed_node = np.asarray(failed_node)
-    per_node = tuple(
-        float(np.mean(np.sum((failed_node == m) & valid, axis=1)))
-        for m in range(n_survivors + 1))
+    if fmask is None:
+        per_node = tuple(
+            float(np.mean(np.sum((failed_node == m) & valid, axis=1)))
+            for m in range(n_survivors + 1))
+    else:
+        fmask = np.asarray(fmask, bool)
+        per_node = tuple(
+            float(np.mean(np.sum(fmask[:, :, m] & valid, axis=1)))
+            for m in range(n_survivors + 1))
     v = valid[:, :, None] & np.ones(n_survivors, bool)
+    if felled is not None:
+        v = v & ~np.asarray(felled, bool)
     actions = np.asarray(wait_action)[v.nonzero()] if v.any() else np.array([])
     pick = lambda a: np.asarray(a)[v.nonzero()]
     return _assemble_summary(
@@ -1534,6 +1675,7 @@ def renewal_monte_carlo(
     max_failures: int = 64,
     engine: str = "device",
     process: Optional[failures.FailureProcess] = None,
+    topology=None,
 ) -> RenewalMonteCarloSummary:
     """Monte-Carlo whole-run energy under per-node failure processes.
 
@@ -1552,6 +1694,11 @@ def renewal_monte_carlo(
     oracle (``renewal_compose``) — same histories, same summary reduction,
     pinned together by tests/test_renewal_device.py.  For several scenarios
     at once use ``renewal_monte_carlo_scenarios`` (one device dispatch).
+
+    ``topology`` (a ``core.topology.Topology`` over the scenario's node
+    count) swaps in the correlated shock sampler on either engine — shock
+    epochs fell several nodes at once; the bit-identity contract between
+    the engines carries over to the correlated histories.
     """
     if process is not None:
         mtbf_s = float(np.mean(failures.as_process(process).mean_s()))
@@ -1559,15 +1706,26 @@ def renewal_monte_carlo(
               max_failures=max_failures)
     if engine == "device":
         res = renewal_monte_carlo_device(cfg, key, stats=True, process=process,
-                                         **kw)
+                                         topology=topology, **kw)
         return _summarize_device_scenario(jax.device_get(res), 0, **kw)
     if engine != "host":
         raise ValueError(f"unknown engine {engine!r} (use 'device' or 'host')")
     n_nodes = len(cfg.survivors) + 1
-    gaps, failed = renewal_failure_gaps(key, n_runs, n_nodes, max_failures,
-                                        mtbf_s, process=process)
-    res = renewal_compose(cfg, gaps, makespan_s, failed_node=failed)
+    if topology is None:
+        gaps, failed = renewal_failure_gaps(
+            key, n_runs, n_nodes, max_failures, mtbf_s, process=process)
+        felled = fmask = None
+    else:
+        gaps, failed, fmask = renewal_failure_gaps(
+            key, n_runs, n_nodes, max_failures, mtbf_s, process=process,
+            topology=topology)
+        felled = np.asarray(node_topology.survivor_slot_mask(fmask, failed))
+        fmask = np.asarray(fmask)
+    res = renewal_compose(cfg, gaps, makespan_s, failed_node=failed,
+                          felled=felled)
     return _renewal_summary(
+        felled=felled,
+        fmask=fmask,
         valid=res.valid,
         failed_node=res.failed_node,
         truncated=res.truncated,
@@ -1590,13 +1748,15 @@ def renewal_monte_carlo_scenarios(
     mtbf_s: float = 14 * 24 * 3600.0,
     max_failures: int = 64,
     process: Optional[failures.FailureProcess] = None,
+    topology=None,
 ) -> dict:
     """name -> ``RenewalMonteCarloSummary`` for stacked scenarios from ONE
     fused device dispatch (sampling + scan + Algorithm 1 + reduction).
 
     Every scenario sees the same sampled failure histories — exactly what
     calling ``renewal_monte_carlo`` per scenario with the same key (and
-    ``process``) yields, minus S-1 dispatches and all the host round-trips.
+    ``process``, and ``topology`` for the correlated family) yields, minus
+    S-1 dispatches and all the host round-trips.
     """
     cfg_list = list(cfgs)
     if process is not None:
@@ -1607,7 +1767,7 @@ def renewal_monte_carlo_scenarios(
     # pay a blocking round-trip per (scenario, field)
     res = jax.device_get(
         renewal_monte_carlo_device(cfg_list, key, stats=True, process=process,
-                                   **kw))
+                                   topology=topology, **kw))
     return {
         cfg.name: _summarize_device_scenario(res, s, **kw)
         for s, cfg in enumerate(cfg_list)

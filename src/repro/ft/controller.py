@@ -100,10 +100,18 @@ class StochasticFailureInjector:
     failure fires at the first pre-step boundary whose upcoming step would
     cross the sampled gap.  Gaps are balanced time since the last renewal
     anchor — exactly the engine's renewal semantics.
+
+    With a ``core.topology.Topology`` the schedule is the correlated shock
+    history instead (``renewal_failure_gaps(..., topology=...)``), and a
+    multi-node shock epoch is replayed as a *burst*: the primary fires
+    with the sampled gap, then every co-felled node fires with a zero gap
+    at the same boundary — the trainer's pre-step drain loop handles the
+    consecutive failures, and the zero gaps are exactly the clustering
+    signature ``AdaptiveController``'s burst detector keys on.
     """
 
     def __init__(self, process, key, *, n_pods: int, max_failures: int = 64,
-                 n_runs: int = 1, run_index: int = 0):
+                 n_runs: int = 1, run_index: int = 0, topology=None):
         if not 0 <= run_index < n_runs:
             raise ValueError(f"run_index {run_index} outside n_runs {n_runs}")
         self.process = process
@@ -112,10 +120,27 @@ class StochasticFailureInjector:
         self.n_runs = int(n_runs)
         self.run_index = int(run_index)
         self.max_failures = int(max_failures)
-        gaps, failed = sweep.renewal_failure_gaps(
-            key, n_runs, n_pods, max_failures, process=process)
-        self.gaps = np.asarray(gaps[run_index], np.float64)
-        self.failed_node = np.asarray(failed[run_index], np.int64)
+        self.topology = topology
+        if topology is None:
+            gaps, failed = sweep.renewal_failure_gaps(
+                key, n_runs, n_pods, max_failures, process=process)
+            self.gaps = np.asarray(gaps[run_index], np.float64)
+            self.failed_node = np.asarray(failed[run_index], np.int64)
+        else:
+            gaps, primary, fmask = sweep.renewal_failure_gaps(
+                key, n_runs, n_pods, max_failures, process=process,
+                topology=topology)
+            flat_g, flat_n = [], []
+            for k in range(gaps.shape[1]):
+                p = int(primary[run_index, k])
+                flat_g.append(float(gaps[run_index, k]))
+                flat_n.append(p)
+                for i in np.nonzero(fmask[run_index, k])[0]:
+                    if int(i) != p:
+                        flat_g.append(0.0)
+                        flat_n.append(int(i))
+            self.gaps = np.asarray(flat_g, np.float64)
+            self.failed_node = np.asarray(flat_n, np.int64)
         self._i = 0
 
     @property
@@ -170,6 +195,19 @@ class AdaptiveController:
     fixed PRNG key (CRN), so successive retunes refine rather than restart
     the search.  ``wait_mode`` (discrete) is retuned by a two-row grid
     evaluation at the incumbent knobs before the continuous CEM stage.
+
+    Graceful degradation (``degrade=True``): every observed gap leaves a
+    PIT residual — ``u = 1 - prod_i S(a_i + g) / S(a_i)``, the fitted (or
+    prior) model's probability of an epoch gap <= the realized one given
+    the clock ages — which is Uniform(0, 1) exactly when the declared
+    renewal model holds.  Correlated bursts violate it in a recognizable
+    way (mass collapses onto u ~ 0: co-felled nodes replay as zero gaps),
+    so a window whose residuals fail a KS check against uniform, or whose
+    raw gaps pile up at zero, marks the process *misfit*.  While misfit
+    the controller refuses to refit or retune on the poisoned window and
+    instead applies ``conservative_policy`` once (or keeps the incumbent
+    when None); after ``hysteresis`` consecutive calm checks it re-engages
+    adaptation.  ``degrade_events`` records every transition.
     """
 
     def __init__(self, prior_process, *, n_pods: int, retune_every: int = 1,
@@ -177,7 +215,11 @@ class AdaptiveController:
                  mu1_bounds=(2.0, 12.0), cem_iters: int = 2,
                  cem_population: int = 12, cem_n_runs: int = 48,
                  cem_max_failures: int = 32, search_wait_mode: bool = True,
-                 seed: int = 0):
+                 seed: int = 0, degrade: bool = False,
+                 conservative_policy: Optional[dict] = None,
+                 burst_window: int = 8, burst_alpha: float = 0.01,
+                 near_zero_s: float = 1.0, near_zero_frac: float = 0.25,
+                 hysteresis: int = 2):
         self.prior_process = prior_process
         self.n_pods = int(n_pods)
         self.retune_every = int(retune_every)
@@ -197,16 +239,57 @@ class AdaptiveController:
         self.fitted: Optional[failures.FailureProcess] = None
         self.retunes: List[RetuneRecord] = []
         self._warm = None                       # previous CEMResult
+        self.degrade = bool(degrade)
+        self.conservative_policy = (dict(conservative_policy)
+                                    if conservative_policy else None)
+        self.burst_window = int(burst_window)
+        self.burst_alpha = float(burst_alpha)
+        self.near_zero_s = float(near_zero_s)
+        self.near_zero_frac = float(near_zero_frac)
+        self.hysteresis = int(hysteresis)
+        self.pit: List[float] = []              # model-PIT residual per gap
+        self._gap_log: List[float] = []
+        self.degraded = False
+        self._calm_streak = 0
+        self.degrade_events: List[dict] = []
 
     # --- observe ------------------------------------------------------------
 
+    def _pit_residual(self, gap_s: float) -> float:
+        """Model probability of an epoch gap <= ``gap_s`` given the current
+        clock ages: ``1 - prod_i S(a_i + g) / S(a_i)`` under the fitted (or
+        prior) process — exactly Uniform(0, 1) when the model holds."""
+        proc = self.fitted or self.prior_process
+        a = np.asarray(self._ages, np.float64)
+        s1 = np.asarray(proc.survival(a + float(gap_s)), np.float64)
+        s0 = np.maximum(np.asarray(proc.survival(a), np.float64), 1e-300)
+        return float(1.0 - np.prod(np.minimum(s1 / s0, 1.0)))
+
     def observe_failure(self, *, gap_s: float, failed_pod: int) -> None:
         """One renewal epoch: every clock aged by the gap, the failed
-        node's age is a complete lifetime and its clock restarts."""
+        node's age is a complete lifetime and its clock restarts.  The
+        PIT residual is taken against the pre-update ages (the model's
+        view of this gap before it happened)."""
+        self.pit.append(self._pit_residual(gap_s))
+        self._gap_log.append(float(gap_s))
         self._ages += float(gap_s)
         self.complete_gaps.append(float(self._ages[failed_pod]))
         self._ages[failed_pod] = 0.0
         self.n_failures += 1
+
+    def burst_active(self) -> bool:
+        """Misfit detector over the last ``burst_window`` observations:
+        raw gaps piling up at zero (the correlated-burst signature — see
+        ``StochasticFailureInjector``'s burst replay) or PIT residuals
+        failing a KS test against Uniform(0, 1)."""
+        if len(self.pit) < self.burst_window:
+            return False
+        g = np.asarray(self._gap_log[-self.burst_window:], np.float64)
+        if float(np.mean(g <= self.near_zero_s)) >= self.near_zero_frac:
+            return True
+        u = np.asarray(self.pit[-self.burst_window:], np.float64)
+        ks = failures.ks_statistic(u, lambda x: np.clip(x, 0.0, 1.0))
+        return bool(ks > failures.ks_critical(u.size, alpha=self.burst_alpha))
 
     # --- fit ----------------------------------------------------------------
 
@@ -242,6 +325,24 @@ class AdaptiveController:
         dt = float(trainer.cluster.step_time_s)
         if remaining_work_s is not None and remaining_work_s < 2.0 * dt:
             return None     # nothing left to amortize a policy change over
+        if self.degrade:
+            if self.burst_active():
+                self._calm_streak = 0
+                if not self.degraded:
+                    self.degraded = True
+                    self.degrade_events.append(
+                        {"step": int(step), "action": "degrade"})
+                    if self.conservative_policy is not None:
+                        return dict(self.conservative_policy)
+                return None  # conservative hold: no refit on a poisoned window
+            if self.degraded:
+                self._calm_streak += 1
+                if self._calm_streak < self.hysteresis:
+                    return None
+                self.degraded = False
+                self._calm_streak = 0
+                self.degrade_events.append(
+                    {"step": int(step), "action": "re-engage"})
         process = self.fit() or self.prior_process
         mean_s = float(np.mean(np.asarray(process.mean_s(), np.float64)))
         work_s = float(remaining_work_s) if remaining_work_s is not None \

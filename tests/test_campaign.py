@@ -255,6 +255,46 @@ def test_store_skips_torn_trailing_line(tmp_path):
     assert store.ResultStore(tmp_path).has("k_torn")
 
 
+def test_store_heals_corrupt_or_stale_index(tmp_path):
+    """The shards are the source of truth; index.json is a rebuildable
+    view.  Any corruption — garbage bytes, truncation, deletion, a stale
+    cells mapping, a checksum mismatch — must be healed on open, not
+    trusted or crashed on."""
+    st_ = store.ResultStore(tmp_path)
+    for i in range(3):
+        st_.put(f"k{i}", **_fake_record(i))
+    good = (tmp_path / "index.json").read_text()
+    idx = json.loads(good)
+    assert set(idx) == {"version", "engine", "checksum", "cells"}
+
+    def reopen_and_check():
+        st2 = store.ResultStore(tmp_path)
+        assert st2.keys() == {"k0", "k1", "k2"}
+        healed = json.loads((tmp_path / "index.json").read_text())
+        assert healed == json.loads(good)
+
+    # garbage bytes
+    (tmp_path / "index.json").write_text('{"version": 1, "garb')
+    reopen_and_check()
+    # deleted outright
+    (tmp_path / "index.json").unlink()
+    reopen_and_check()
+    # stale cells mapping (e.g. an index copied from another store)
+    bad = dict(idx)
+    bad["cells"] = {"k0": idx["cells"]["k0"]}
+    (tmp_path / "index.json").write_text(json.dumps(bad))
+    reopen_and_check()
+    # checksum mismatch with a plausible-looking cells mapping
+    bad = dict(idx)
+    bad["checksum"] = "0" * 64
+    (tmp_path / "index.json").write_text(json.dumps(bad))
+    reopen_and_check()
+    # a valid index is left untouched (byte-identical)
+    before = (tmp_path / "index.json").read_text()
+    store.ResultStore(tmp_path)
+    assert (tmp_path / "index.json").read_text() == before
+
+
 def test_store_rejects_non_finite_results(tmp_path):
     st_ = store.ResultStore(tmp_path)
     with pytest.raises(ValueError):
@@ -333,6 +373,79 @@ def test_campaign_matches_renewal_monte_carlo_scenarios():
         got = {k: v for k, v in rec["result"].items()
                if k != "mean_makespan_s"}
         assert got == expect, f"campaign record diverges for {name}"
+
+
+def test_topology_cell_key_resolves_and_changes_hash():
+    base = {"scenario": {"base": SCEN_A},
+            "process": {"kind": "exponential", "mtbf_s": MTBF_S},
+            "run": {"n_runs": N_RUNS, "max_failures": MAX_FAILURES,
+                    "makespan_s": MAKESPAN_S},
+            "seed": 0}
+    corr = dict(base, topology={"kind": "rack", "rack_size": 2,
+                                "shock_mtbs_s": 5.0 * 24 * 3600.0,
+                                "p_kill": 0.9})
+    n_base = spec.normalize_config(base)
+    n_corr = spec.normalize_config(corr)
+    assert store.cell_key(n_base) != store.cell_key(n_corr)
+    exp = spec.resolve(n_corr)
+    assert exp.topology is not None
+    assert spec.resolve(n_base).topology is None
+    # unknown keys and kinds are rejected at normalize time
+    with pytest.raises(ValueError, match="topology"):
+        spec.normalize_config(dict(base, topology={"kind": "rack",
+                                                   "rack_size": 2,
+                                                   "shock_mtbs_s": 1.0,
+                                                   "bogus": 1}))
+    with pytest.raises(ValueError, match="kind"):
+        spec.normalize_config(dict(base, topology={"kind": "mesh",
+                                                   "rack_size": 2,
+                                                   "shock_mtbs_s": 1.0}))
+
+
+def test_correlated_campaign_matches_direct_dispatch():
+    """A topology lane dispatches through the same fused engine as a
+    direct ``renewal_monte_carlo`` call with that topology (CRN parity on
+    the shared key), and iid lanes in the same campaign stay untouched."""
+    from repro.core import topology as nt
+    from repro.core.scenarios import paper_scenarios
+    topo_spec = {"kind": "rack", "rack_size": 2,
+                 "shock_mtbs_s": 5.0 * 24 * 3600.0, "p_kill": 0.9}
+    m = spec.axis("topology", [("iid", {}),
+                               ("rack", {"topology": topo_spec})])
+    camp = spec.campaign("corr", m, base={
+        "scenario": {"base": SCEN_A},
+        "process": {"kind": "exponential", "mtbf_s": MTBF_S},
+        "run": {"n_runs": N_RUNS, "max_failures": MAX_FAILURES,
+                "makespan_s": MAKESPAN_S},
+        "seed": 0})
+    recs = {r["labels"]["topology"]: r for r in
+            runner.run_campaign(camp).records}
+    cfg = paper_scenarios()[SCEN_A]
+    topo = nt.rack_topology(len(cfg.survivors) + 1, 2,
+                            shock_mtbs_s=5.0 * 24 * 3600.0, p_kill=0.9)
+    for label, topology in (("iid", None), ("rack", topo)):
+        direct = sweep.renewal_monte_carlo(
+            cfg, jax.random.PRNGKey(0), n_runs=N_RUNS,
+            makespan_s=MAKESPAN_S, max_failures=MAX_FAILURES,
+            process=__import__("repro.core.failures", fromlist=["x"])
+            .Exponential(mtbf_s=MTBF_S), topology=topology)
+        got = {k: v for k, v in recs[label]["result"].items()
+               if k != "mean_makespan_s"}
+        assert got == runner.summary_to_result(direct), label
+    assert recs["rack"]["result"]["mean_failures"] !=         recs["iid"]["result"]["mean_failures"]
+
+
+def test_seeded_chaos_cut_is_deterministic_and_in_range():
+    from repro.campaign.__main__ import _seeded_cut
+    for seed in (0, 1, 42, 123456789):
+        n = _seeded_cut(seed, 12)
+        assert _seeded_cut(seed, 12) == n     # both halves agree on it
+        assert 1 <= n < 12
+    # different seeds actually move the kill point
+    assert len({_seeded_cut(s, 12) for s in range(40)}) > 3
+    # degenerate matrix sizes stay in range
+    assert _seeded_cut(7, 1) == 1
+    assert _seeded_cut(7, 2) == 1
 
 
 def test_chunk_lanes_memory_budget():

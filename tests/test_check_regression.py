@@ -22,6 +22,8 @@ def _full_fresh(machine=MACHINE, dps=1e6, speedup=8.0):
          "decisions_per_s": dps, "derived": "x"},
         {"name": "failure_sweep/renewal_speedup", "us_per_call": 0.0,
          "decisions_per_s": 0.0, "derived": f"{speedup:g}x_device_vs_host"},
+        {"name": "failure_sweep/renewal_correlated_device_6x256",
+         "us_per_call": 1.0, "decisions_per_s": dps, "derived": "x"},
         {"name": "optimize_policy/grid_42x64x64x3", "us_per_call": 1.0,
          "decisions_per_s": dps, "derived": "x"},
         {"name": "ft/controller_retune", "us_per_call": 1.0,

@@ -307,6 +307,38 @@ def test_fit_weibull_convergence_with_sample_size():
     assert err[4000] < 0.1
 
 
+def test_fit_weibull_degenerate_fallbacks():
+    """Regression: the burst detector feeds this short, sometimes
+    pathological windows — every documented fallback must return finite
+    numbers instead of NaN/divergence (docs/failures.md)."""
+    # nothing to fit at all
+    with pytest.raises(ValueError, match="at least one"):
+        F.fit_weibull([])
+    with pytest.raises(ValueError, match="at least one"):
+        F.fit_weibull([], censored=[0.0, -1.0])
+    # all-censored: exponential total-exposure bound with zero events
+    assert F.fit_weibull([], censored=[100.0, 250.0]) == (1.0, 350.0)
+    # a single complete gap: the exponential MLE
+    assert F.fit_weibull([500.0]) == (1.0, 500.0)
+    # ... with censored mass the fixed point runs but must stay clamped
+    # and finite (censored ages below the gap can't constrain the shape)
+    k, scale = F.fit_weibull([500.0], censored=[300.0])
+    assert np.isfinite(k) and np.isfinite(scale)
+    assert 1e-2 <= k <= 1e2 and scale > 0
+    # zero spread: the fixed point diverges upward -> shape saturates at
+    # the clamp and the scale lands at ~the common value
+    k, scale = F.fit_weibull([600.0] * 8)
+    assert np.isfinite(k) and np.isfinite(scale)
+    assert k == 100.0
+    assert scale == pytest.approx(600.0, rel=0.05)
+    # heavy censoring + extreme spread must not overflow t**k
+    k, scale = F.fit_weibull([1e-3, 1.0, 1e6], censored=[1e7] * 50)
+    assert np.isfinite(k) and np.isfinite(scale) and k > 0 and scale > 0
+    # near-zero spread stays finite on the way to the clamp
+    k, scale = F.fit_weibull([600.0, 600.0 + 1e-9, 600.0 - 1e-9])
+    assert np.isfinite(k) and np.isfinite(scale)
+
+
 def test_as_process_and_validation():
     assert isinstance(F.as_process(None, MTBF), F.Exponential)
     w = F.Weibull.from_mtbf(0.7, MTBF)
