@@ -3,13 +3,23 @@
 Every benchmark emits rows of the same shape —
 
     {"name": "<bench>/<row>", "us_per_call": float,
-     "decisions_per_s": float, "derived": str, ...extra domain fields}
+     "decisions_per_s": float, "derived": str, "engine": str,
+     ...extra domain fields}
 
 — prefixed with a ``meta/machine`` fingerprint row, printed as
 ``name,us_per_call,derived`` CSV, and optionally dumped with ``--json``
 so ``benchmarks.check_regression`` can gate them.  This module is that
 contract's single definition; all ``benchmarks/*.py`` scripts route
 through it.
+
+``engine`` tags which computational engine produced a throughput row
+(e.g. ``"scan-x64"``, ``"host-f64"``, ``"pallas-interpret-cpu"``): the
+regression gate compares absolute decisions/s only between rows with the
+*same* tag, so re-pointing a row at a different engine (or landing a new
+engine's row over an old baseline name) skips the comparison instead of
+reporting a bogus regression.  Empty string (the default, and the value
+legacy records carry implicitly) means untagged — untagged pairs are
+still compared.
 """
 from __future__ import annotations
 
@@ -31,10 +41,10 @@ def meta_row() -> dict:
 
 
 def row(name: str, us_per_call: float = 0.0, decisions_per_s: float = 0.0,
-        derived: str = "", **extra) -> dict:
+        derived: str = "", engine: str = "", **extra) -> dict:
     return {"name": name, "us_per_call": float(us_per_call),
             "decisions_per_s": float(decisions_per_s),
-            "derived": str(derived), **extra}
+            "derived": str(derived), "engine": str(engine), **extra}
 
 
 def print_rows(rows) -> None:

@@ -6,8 +6,10 @@ under ``benchmarks/artifacts/`` (all ``BENCH_*.json`` there, merged) and
 fails when any throughput row (``decisions_per_s > 0`` in both sets,
 matched by name) regresses by more than ``THRESHOLD`` (30 %).
 
-Raw decisions/s are only comparable on like hardware, so the absolute rows
-are gated only when the ``meta/machine`` fingerprints match; the relative
+Raw decisions/s are only comparable on like hardware AND like engine, so
+the absolute rows are gated only when the ``meta/machine`` fingerprints
+match and — for rows that carry the ``engine`` tag on both sides — the
+tags agree (a mismatch skips that row with a notice); the relative
 speedup rows (``SPEEDUP_ROWS`` — each a ratio of two timings taken
 interleaved on the same machine) are checked on every run, a baseline row
 that disappears from the fresh set is itself a failure, and the
@@ -47,6 +49,9 @@ REQUIRED_ROW_PREFIXES = (
     # the correlated shock sampler fused into the device engine
     # (core.topology) — absence means the correlated path broke
     "failure_sweep/renewal_correlated",
+    # the float32 Kahan-ledger Pallas engine (kernels.renewal_scan) — its
+    # absence means engine="pallas" no longer dispatches
+    "failure_sweep/renewal_pallas",
     "optimize_policy/grid_",
     "ft/controller_retune",
     # the chunked campaign-runner path (repro.campaign.runner) — its
@@ -189,6 +194,19 @@ def main(argv=None) -> int:
                 continue
             if name not in fresh:
                 failures.append(f"{name}: throughput row missing from fresh records")
+                continue
+            # decisions/s from different engines (x64 scan vs f32 Pallas vs
+            # host oracle) are not comparable: when both rows carry engine
+            # tags and they differ, skip the comparison instead of failing.
+            # Untagged legacy rows (or a tagged row against an untagged
+            # baseline) are still compared — the skip needs positive
+            # evidence of a real engine mismatch.
+            e_base = row.get("engine", "")
+            e_fresh = fresh[name].get("engine", "")
+            if e_base and e_fresh and e_base != e_fresh:
+                print(f"{name}: engine mismatch (fresh {e_fresh!r} vs "
+                      f"baseline {e_base!r}); absolute decisions/s not "
+                      "comparable — skipped")
                 continue
             got = fresh[name].get("decisions_per_s", 0.0)
             ok = got >= (1.0 - THRESHOLD) * dps

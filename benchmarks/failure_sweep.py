@@ -26,6 +26,32 @@ repetitions so both paths see the same machine phases.  A per-process row
 device program — ``repro.core.failures``) tracks the failure-process axis;
 ``benchmarks/check_regression.py`` gates on its presence.
 
+A third engine row covers the **float32 Pallas kernel**
+(``repro.kernels.renewal_scan``, ``engine="pallas"``): the fused
+epoch-scan + Algorithm-1 fold with the Kahan-compensated energy ledger,
+run through the same six-scenario Monte-Carlo task.  On CPU the kernel
+lowers through ``interpret=True`` under jit (plain XLA ops — the compiled
+CPU path), so the row's absolute number is a same-machine engine
+comparison, not an accelerator number; every throughput row therefore
+carries an ``engine`` tag and the regression gate only compares absolute
+decisions/s between rows with matching tags.
+
+Roofline methodology (the ``renewal_pallas_roofline`` row): the model is
+*analytic* — no hardware counters — so the same numbers describe the CPU
+interpret path and a real accelerator run.  A *decision* is one
+(epoch, survivor) point of the fused scan.  Flops per decision walk the
+kernel body: sawtooth advance ~12, rendezvous wrap + re-execution race
+~10, checkpoint plan ~25, the Algorithm-1 fold ~30 per ladder level
+(x F=4), trailing spans ~12, Kahan ledger ~15 — ~190 total.  Bytes per
+decision count only HBM traffic (the whole point of the kernel is that
+the carry never leaves registers): per run of K epochs x N survivors the
+kernel reads K f32 gaps + the K x N f32 felled mask and writes the K i32
+valid column + ~13 per-run scalars, i.e. (4+4)/N + 4 + ~52/(K*N) ~= 7 B
+at the benchmark shape (N=3, K=32).  Arithmetic intensity ~27 flop/B sits
+far right of any machine's DRAM ridge (5-15 flop/B): the kernel is
+compute-bound everywhere, which is why decisions/s is a faithful proxy
+for FLOP/s and can be regression-gated directly.
+
 Run:  PYTHONPATH=src python -m benchmarks.failure_sweep [--json BENCH_failure_sweep.json] [--full]
 
 ``--full`` adds the large-shape device dispatch (4096 runs x 64 epochs x 6
@@ -283,6 +309,69 @@ def correlated_throughput(
     }
 
 
+# analytic roofline model for the Pallas kernel (derivation in the module
+# docstring): flops walk the kernel body at F=4 ladder levels; bytes count
+# the HBM traffic only — gaps + felled in, valid column + run scalars out
+ROOFLINE_FLOPS_PER_DECISION = 190.0
+_ROOFLINE_BYTES_IN_PER_EPOCH = 8.0      # f32 gap + i32 valid, shared by N
+_ROOFLINE_BYTES_FELLED = 4.0            # f32 mask per (epoch, survivor)
+_ROOFLINE_BYTES_RUN_OUT = 52.0          # 13 per-run f32/i32 output scalars
+
+
+def renewal_roofline(decisions_per_s: float, *, n_survivors: int = 3,
+                     max_failures: int = RENEWAL_MAX_FAILURES) -> dict:
+    """Roofline coordinates for a measured kernel throughput: achieved
+    GFLOP/s and GB/s plus the model's arithmetic intensity — enough to
+    place the point against any machine's roofline."""
+    n, k = float(n_survivors), float(max_failures)
+    bpd = (_ROOFLINE_BYTES_IN_PER_EPOCH / n + _ROOFLINE_BYTES_FELLED
+           + _ROOFLINE_BYTES_RUN_OUT / (k * n))
+    return {
+        "flops_per_decision": ROOFLINE_FLOPS_PER_DECISION,
+        "bytes_per_decision": bpd,
+        "arithmetic_intensity": ROOFLINE_FLOPS_PER_DECISION / bpd,
+        "gflops_per_s": decisions_per_s * ROOFLINE_FLOPS_PER_DECISION / 1e9,
+        "gbytes_per_s": decisions_per_s * bpd / 1e9,
+    }
+
+
+def pallas_throughput(
+    n_runs: int = RENEWAL_RUNS,
+    max_failures: int = RENEWAL_MAX_FAILURES,
+    reps: int = RENEWAL_REPS,
+) -> dict:
+    """Renewal decisions/s for the float32 Pallas engine
+    (``kernels.renewal_scan`` via ``engine="pallas"``) against the x64
+    scan engine on the same six-scenario exponential Monte-Carlo task —
+    same PRNG key and shape as ``renewal_throughput``'s device row, timed
+    interleaved with a scan run so the vs-scan ratio is same-phase."""
+    cfg_list = list(paper_scenarios().values())
+    key = jax.random.PRNGKey(1)
+    kw = dict(n_runs=n_runs, makespan_s=RENEWAL_MAKESPAN_D * 24 * 3600.0,
+              mtbf_s=RENEWAL_MTBF_D * 24 * 3600.0, max_failures=max_failures)
+    pal = lambda: sweep.renewal_monte_carlo_scenarios(
+        cfg_list, key, engine="pallas", **kw)
+    scan = lambda: sweep.renewal_monte_carlo_scenarios(cfg_list, key, **kw)
+    summaries = pal()                      # warm (compile) + stats
+    scan()
+    t_pal, t_scan = [], []
+    for _ in range(reps):
+        t0 = time.perf_counter(); pal(); t_pal.append(time.perf_counter() - t0)
+        t0 = time.perf_counter(); scan(); t_scan.append(time.perf_counter() - t0)
+    dt, dt_scan = statistics.median(t_pal), statistics.median(t_scan)
+    n = len(cfg_list) * n_runs * max_failures * len(cfg_list[0].survivors)
+    mc = summaries["scenario2_long_reexec"]
+    return {
+        "seconds": dt,
+        "decisions": n,
+        "decisions_per_s": n / dt,
+        "vs_scan": dt_scan / dt,
+        "mean_failures": mc.mean_failures,
+        "mean_saving_pct": mc.mean_saving_pct,
+        "roofline": renewal_roofline(n / dt, max_failures=max_failures),
+    }
+
+
 def device_scaling(n_runs: int = FULL_RUNS, max_failures: int = FULL_MAX_FAILURES,
                    reps: int = 3) -> dict:
     """One fused dispatch at the large shape (--full): 4096 runs x 64 epochs
@@ -359,12 +448,14 @@ def run(full: bool = False) -> list:
             f"_loop={thr['host_loop_s'] * 1e3:.1f}ms"
             f"_dispatch={thr['host_dispatch_s'] * 1e3:.1f}ms"
         ),
+        "engine": "host-f64",
     })
     rows.append({
         "name": f"failure_sweep/renewal_device_6x{shape}",
         "us_per_call": thr["device_mc_s"] * 1e6,
         "decisions_per_s": thr["device_dps"],
         "derived": f"{thr['device_dps']:.3e}dec/s_one_dispatch",
+        "engine": "scan-x64",
     })
     rows.append({
         "name": "failure_sweep/renewal_speedup",
@@ -390,6 +481,7 @@ def run(full: bool = False) -> list:
             f"_failures={wthr['mean_failures']:.1f}"
             f"_save_pct={wthr['mean_saving_pct']:.2f}"
         ),
+        "engine": "scan-x64",
     })
     # correlated row: rack shocks fused into the same device program;
     # the regression gate also requires this row
@@ -404,6 +496,40 @@ def run(full: bool = False) -> list:
             f"_failures={cthr['mean_failures']:.1f}"
             f"_save_pct={cthr['mean_saving_pct']:.2f}"
         ),
+        "engine": "scan-x64",
+    })
+    # float32 Pallas engine (kernels.renewal_scan): same six-scenario task
+    # through the compiled interpret path, plus its analytic roofline
+    # coordinates; check_regression gates on the row's presence, and the
+    # engine tag keeps its absolute number from being compared against a
+    # scan-engine baseline of the same name
+    pallas_engine = f"pallas-interpret-{jax.default_backend()}"
+    pthr = pallas_throughput()
+    rows.append({
+        "name": f"failure_sweep/renewal_pallas_6x{shape}",
+        "us_per_call": pthr["seconds"] * 1e6,
+        "decisions_per_s": pthr["decisions_per_s"],
+        "derived": (
+            f"{pthr['decisions_per_s']:.3e}dec/s"
+            f"_{pthr['vs_scan']:.1f}x_vs_scan"
+            f"_failures={pthr['mean_failures']:.1f}"
+            f"_save_pct={pthr['mean_saving_pct']:.2f}"
+        ),
+        "engine": pallas_engine,
+    })
+    rl = pthr["roofline"]
+    rows.append({
+        "name": "failure_sweep/renewal_pallas_roofline",
+        "us_per_call": 0.0,
+        "decisions_per_s": 0.0,
+        "derived": (
+            f"{rl['gflops_per_s']:.2f}GFLOP/s"
+            f"_{rl['gbytes_per_s']:.3f}GB/s"
+            f"_AI={rl['arithmetic_intensity']:.0f}flop/B"
+        ),
+        "engine": pallas_engine,
+        "flops_per_decision": rl["flops_per_decision"],
+        "bytes_per_decision": rl["bytes_per_decision"],
     })
     if full:
         sc = device_scaling()
@@ -412,6 +538,7 @@ def run(full: bool = False) -> list:
             "us_per_call": sc["seconds"] * 1e6,
             "decisions_per_s": sc["decisions_per_s"],
             "derived": f"{sc['decisions_per_s']:.3e}dec/s_one_dispatch",
+            "engine": "scan-x64",
         })
     for name, mc in renewal_stats().items():
         rows.append({

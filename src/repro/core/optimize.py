@@ -335,6 +335,7 @@ def evaluate_policy_grid(
     mtbf_s: Optional[float] = None,
     process: Optional[failures.FailureProcess] = None,
     topology=None,
+    engine: str = "scan",
 ) -> PolicyEvalResult:
     """Expected whole-run energy AND makespan for every policy — one fused
     device dispatch (sampling shared across policies, scan, Algorithm 1,
@@ -347,6 +348,12 @@ def evaluate_policy_grid(
     ``mtbf_s`` (per node).  Deterministic for a fixed ``key``; per-policy
     energies are bit-identical to standalone ``renewal_monte_carlo_device``
     calls at the same key (CRN contract, pinned in tests/test_optimize.py).
+
+    ``engine="pallas"`` evaluates the grid through the float32
+    Kahan-ledger kernel (``kernels.renewal_scan``) instead of the x64
+    scan — the sampler (and so the CRN pairing) is identical; per-policy
+    energies differ from the scan engine only by the float32 geometry
+    (<= 1e-4 relative, tests/test_renewal_pallas.py).
     """
     if (work_s is None) == (makespan_s is None):
         raise ValueError("give exactly one of work_s or makespan_s")
@@ -361,7 +368,7 @@ def evaluate_policy_grid(
     stats = jax.device_get(sweep.renewal_monte_carlo_policies(
         stacked, key, makespan_s=makespans, n_runs=n_runs,
         max_failures=max_failures, process=proc, stats=True,
-        topology=topology))
+        topology=topology, engine=engine))
 
     f8 = lambda a: np.asarray(a, np.float64)
     energy_ref, energy_int = f8(stats.energy_ref), f8(stats.energy_int)
@@ -634,6 +641,7 @@ def optimize_policy(
     refine: bool = False,
     cem_kw: Optional[dict] = None,
     topology=None,
+    engine: str = "scan",
 ) -> PolicyOptimum:
     """Tune the policy knobs for one scenario under one failure process.
 
@@ -643,7 +651,10 @@ def optimize_policy(
     runs ``cem_refine`` on the continuous knobs seeded at the grid argmin —
     bounds default to the grid's own knob ranges.  ``process=None`` is the
     paper's exponential at per-node ``mtbf_s`` (default 14 days, the
-    renewal engine's default).
+    renewal engine's default).  ``engine="pallas"`` runs the grid stage on
+    the float32 Kahan-ledger kernel (the CEM refinement stage keeps the
+    scan engine — it re-evaluates single policies through
+    ``evaluate_policy_grid``'s default).
     """
     if key is None:
         key = jax.random.PRNGKey(0)
@@ -654,7 +665,8 @@ def optimize_policy(
         table = default_policy_table(cfg, mtbf)
     res = evaluate_policy_grid(
         cfg, table, key, work_s=work_s, n_runs=n_runs,
-        max_failures=max_failures, process=proc, topology=topology)
+        max_failures=max_failures, process=proc, topology=topology,
+        engine=engine)
     front = pareto_front(res.mean_energy_j, res.mean_makespan_s)
     knee = res.policy(knee_point(res.mean_energy_j, res.mean_makespan_s, front))
     best = res.policy(res.best)

@@ -233,7 +233,10 @@ def evaluate_strategies_fold(
     mu1 = jnp.asarray(mu1, jnp.float32)
     mu2 = jnp.asarray(mu2, jnp.float32)
     ref_level = int(ref_level)
-    active = wait_mode == em.WaitMode.ACTIVE
+    # plain ints, not IntEnum members: enum instances fail JAX's exact-type
+    # literal check and would be captured as jaxpr constants, which the
+    # Pallas kernel reusing this fold (kernels/renewal_scan.py) rejects
+    active = wait_mode == int(em.WaitMode.ACTIVE)
     min_level = ladder.num_levels - 1
     p_awake = jnp.where(active, ladder.p_comp[min_level], p_idle_wait)
     feas_rhs = t_failed * (1.0 + 1e-6) + 1e-3
@@ -278,10 +281,11 @@ def evaluate_strategies_fold(
     sleeps = jnp.where(feasible_any, best["sleeps"], sleeps_ref) & feasible_any
     wait_action = jnp.where(
         sleeps,
-        em.WaitAction.SLEEP,
-        jnp.where(active, em.WaitAction.MIN_FREQ, em.WaitAction.NONE),
+        int(em.WaitAction.SLEEP),
+        jnp.where(active, int(em.WaitAction.MIN_FREQ), int(em.WaitAction.NONE)),
     ).astype(jnp.int32)
-    wait_action = jnp.where(feasible_any, wait_action, em.WaitAction.NONE)
+    wait_action = jnp.where(
+        feasible_any, wait_action, int(em.WaitAction.NONE))
     saving = eni - e_sel
     return Decision(
         level=level.astype(jnp.int32),

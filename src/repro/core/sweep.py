@@ -1277,6 +1277,82 @@ _renewal_policy_mc_jit = jax.jit(
     _renewal_policy_mc_core, static_argnames=("n_runs", "max_failures", "stats"))
 
 
+# ---------------------------------------------------------------------------
+# engine="pallas": float32 geometry + Kahan energy ledger
+# (kernels/renewal_scan.py) behind the same Monte-Carlo entry points
+# ---------------------------------------------------------------------------
+
+def _pallas_interpret() -> bool:
+    """Pallas execution mode for the current backend: the interpreter
+    everywhere but TPU.  Interpret mode is traceable, so under ``jax.jit``
+    the kernel lowers to ordinary XLA ops — the compiled CPU path CI
+    exercises."""
+    return jax.default_backend() != "tpu"
+
+
+def _pack_pallas_inputs(stacked: SweepInputs, makespan_s):
+    """Flatten a (scenario- or policy-)stacked ``SweepInputs`` plus the
+    per-lane makespan into the Pallas kernel's packed operands
+    (``kernels.renewal_scan``): the ``(P, N_PARAMS)`` scalar row, the
+    ``(P, 3, N)`` node-state block, and the ``(P, 5, F)`` power ladder.
+    Float32 casts of float64-built leaves are bit-exact for every value
+    the configs carry (tests/test_precision.py pins this), so the policy
+    path and the scenario path feed the kernel identical bits."""
+    from repro.kernels import renewal_scan as _rs
+
+    f4 = lambda x: jnp.asarray(x, jnp.float32)
+    params = _rs.pack_lane_params(
+        interval=stacked.interval, dur=stacked.dur, reexec0=stacked.reexec0,
+        t_down=stacked.t_down, t_restart=stacked.t_restart, mu1=stacked.mu1,
+        mu2=stacked.mu2, wait_mode=stacked.wait_mode,
+        p_idle_wait=stacked.p_idle_wait, move_ahead=stacked.move_ahead,
+        move_frac=stacked.move_frac, makespan=f4(makespan_s),
+        sleep=jax.tree.map(f4, stacked.sleep))
+    nodes = jnp.stack(
+        [f4(stacked.age0), f4(stacked.exec_rem0), f4(stacked.period)], axis=1)
+    lad = stacked.ladder
+    ladder = jnp.stack([f4(lad.freq_ghz), f4(lad.p_comp), f4(lad.beta),
+                        f4(lad.p_ckpt), f4(lad.gamma)], axis=1)
+    return params, nodes, ladder
+
+
+def _renewal_pallas_mc_core(stacked: SweepInputs, key: jax.Array, makespan_s,
+                            process, n_runs: int, max_failures: int,
+                            topology=None, compensated: bool = True):
+    """Fused Monte-Carlo through the Pallas kernel: the SAME gap sampler as
+    the x64 scan engine (``failures.sample_renewal_gaps`` draws identical
+    float32 bits with or without x64 — the CRN contract carries over
+    unchanged), then the packed f32 composition.  ``makespan_s`` is per
+    lane, so one core serves both the scenario stack (scalar broadcast) and
+    the policy stack (per-policy wall makespans)."""
+    from repro.kernels import renewal_scan as _rs
+
+    n_nodes = stacked.period.shape[-1] + 1
+    if topology is None:
+        gaps32, failed = failures.sample_renewal_gaps(
+            process, key, n_runs, max_failures, n_nodes)
+        felled = fmask = None
+    else:
+        gaps32, fmask, failed = node_topology.sample_correlated_renewal_gaps(
+            topology, process, key, n_runs, max_failures, n_nodes)
+        felled = node_topology.survivor_slot_mask(fmask, failed)
+    params, nodes, ladder = _pack_pallas_inputs(stacked, makespan_s)
+    gaps_t = jnp.asarray(gaps32, jnp.float32).T                  # (K, R)
+    felled_t = (None if felled is None
+                else jnp.transpose(felled, (1, 2, 0)).astype(jnp.float32))
+    out = _rs.renewal_scan_pallas(
+        params, nodes, ladder, gaps_t, felled_t,
+        interpret=_pallas_interpret(), compensated=compensated)
+    out["valid"] = jnp.transpose(out["valid"], (0, 2, 1)).astype(bool)
+    out["truncated"] = out["truncated"].astype(bool)
+    return _attach_failed_counts(out, failed, n_nodes, fmask=fmask)
+
+
+_renewal_pallas_mc_jit = jax.jit(
+    _renewal_pallas_mc_core,
+    static_argnames=("n_runs", "max_failures", "compensated"))
+
+
 def renewal_compose_policies(stacked: SweepInputs, gaps, makespan_s,
                              felled=None):
     """Compose explicit failure histories for a policy-stacked scenario.
@@ -1309,6 +1385,7 @@ def renewal_monte_carlo_policies(
     process: Optional[failures.FailureProcess] = None,
     stats: bool = True,
     topology=None,
+    engine: str = "scan",
 ):
     """Whole-run Monte-Carlo over a policy grid — one fused dispatch.
 
@@ -1329,8 +1406,29 @@ def renewal_monte_carlo_policies(
     axis.  ``topology`` (a ``core.topology.Topology``) swaps in the
     correlated shock sampler — histories and felled masks stay shared
     across policies (CRN holds for the correlated family too).
+
+    ``engine="pallas"`` dispatches the float32 Kahan-ledger kernel
+    (``kernels.renewal_scan``) instead of the x64 scan — stats-only, same
+    sampler and therefore the same CRN property (the float32 casts of the
+    float64 policy-stacked leaves are bit-exact).  See docs/sweep.md
+    ("Precision strategy").
     """
     proc = failures.as_process(process, mtbf_s)
+    if engine == "pallas":
+        if not stats:
+            raise ValueError(
+                "engine='pallas' is the stats-only hot path; use the scan "
+                "engine for per-epoch RenewalDeviceResult diagnostics")
+        cast = (lambda a: a.astype(jnp.float32)
+                if jnp.issubdtype(a.dtype, jnp.floating) else a)
+        out = _renewal_pallas_mc_jit(
+            jax.tree.map(cast, stacked), key,
+            jnp.asarray(np.asarray(makespan_s, np.float32)), proc,
+            n_runs=n_runs, max_failures=max_failures, topology=topology)
+        return _wrap_device_stats(out)
+    if engine != "scan":
+        raise ValueError(
+            f"unknown engine {engine!r} (use 'scan' or 'pallas')")
     with enable_x64():
         makespan = jnp.asarray(np.asarray(makespan_s, np.float64))
         out, gaps, failed = _renewal_policy_mc_jit(
@@ -1376,25 +1474,33 @@ def _cfg_fingerprint(cfg: ScenarioConfig) -> tuple:
 _renewal_inputs_cache: dict = {}
 
 
-def _renewal_device_inputs(cfgs):
-    """Validate and stack scenarios into float64 ``SweepInputs`` (call under
-    ``enable_x64``).  Accepts one ``ScenarioConfig`` or a sequence; always
-    returns the list plus a stacked pytree with a leading scenario axis.
+def _renewal_device_inputs(cfgs, dtype=jnp.float64):
+    """Validate and stack scenarios into ``SweepInputs`` of ``dtype``
+    (float64 for the x64 scan engine — call under ``enable_x64`` — float32
+    for the Pallas engine).  Accepts one ``ScenarioConfig`` or a sequence;
+    always returns the list plus a stacked pytree with a leading scenario
+    axis.
 
-    Stacking is memoized on the configs' *content*: rebuilding the device
-    arrays costs tens of milliseconds of host time (dozens of small
-    transfers), which would otherwise dominate the jitted dispatch itself
-    on repeated calls — the whole point of the device engine.
+    Stacking is memoized on the configs' *content* AND the dtype regime:
+    rebuilding the device arrays costs tens of milliseconds of host time
+    (dozens of small transfers), which would otherwise dominate the jitted
+    dispatch itself on repeated calls — the whole point of the device
+    engine.  The regime component is the *effective* dtype ``jnp.asarray``
+    yields right now (a float64 request outside ``enable_x64`` builds
+    float32 arrays), so toggling x64 around a cached call — or interleaving
+    the f32 Pallas engine with the x64 scan — can never serve stale-dtype
+    stacked inputs (tests/test_precision.py pins the regression).
     """
     cfg_list = [cfgs] if isinstance(cfgs, ScenarioConfig) else list(cfgs)
     if not cfg_list:
         raise ValueError("no scenarios to compose")
-    cache_key = tuple(_cfg_fingerprint(c) for c in cfg_list)
+    regime = jnp.asarray(0.0, dtype).dtype.name
+    cache_key = (regime,) + tuple(_cfg_fingerprint(c) for c in cfg_list)
     stacked = _renewal_inputs_cache.get(cache_key)
     if stacked is None:
         for cfg in cfg_list:
             _check_renewal_config(cfg)
-        inputs = [sweep_inputs(c, jnp.float64) for c in cfg_list]
+        inputs = [sweep_inputs(c, dtype) for c in cfg_list]
         shapes = {i.exec_rem0.shape for i in inputs}
         ladders = {i.ladder.freq_ghz.shape for i in inputs}
         if len(shapes) != 1 or len(ladders) != 1:
@@ -1459,6 +1565,7 @@ def renewal_monte_carlo_device(
     stats: bool = False,
     process: Optional[failures.FailureProcess] = None,
     topology=None,
+    engine: str = "scan",
 ):
     """Whole-run Monte-Carlo with gap sampling fused into the device program.
 
@@ -1482,8 +1589,29 @@ def renewal_monte_carlo_device(
     threads the felled slots through the composition — still one fused
     program, bit-identical histories to the host oracle's
     ``renewal_failure_gaps(..., topology=...)``.
+
+    ``engine="scan"`` (default) is the x64 ``lax.scan`` engine described
+    above; ``engine="pallas"`` dispatches the float32 Pallas kernel with
+    the Kahan-compensated energy ledger (``kernels.renewal_scan``) —
+    stats-only (``stats=False`` raises: the per-epoch diagnostic view
+    belongs to the cross-validating engines), same sampler, same keys,
+    same histories, <= 1e-4 relative on whole-run energies vs the float64
+    oracle (tests/test_renewal_pallas.py).
     """
     proc = failures.as_process(process, mtbf_s)
+    if engine == "pallas":
+        if not stats:
+            raise ValueError(
+                "engine='pallas' is the stats-only hot path; use the scan "
+                "engine for per-epoch RenewalDeviceResult diagnostics")
+        cfg_list, stacked = _renewal_device_inputs(cfgs, jnp.float32)
+        out = _renewal_pallas_mc_jit(
+            stacked, key, jnp.float32(makespan_s), proc,
+            n_runs=n_runs, max_failures=max_failures, topology=topology)
+        return _wrap_device_stats(out)
+    if engine != "scan":
+        raise ValueError(
+            f"unknown engine {engine!r} (use 'scan' or 'pallas')")
     with enable_x64():
         cfg_list, stacked = _renewal_device_inputs(cfgs)
         out, gaps, failed = _renewal_mc_jit(
@@ -1690,10 +1818,14 @@ def renewal_monte_carlo(
     (averaged over heterogeneous nodes).
 
     ``engine="device"`` (default) runs the fused jitted program
-    (``renewal_monte_carlo_device``); ``engine="host"`` runs the float64
-    oracle (``renewal_compose``) — same histories, same summary reduction,
-    pinned together by tests/test_renewal_device.py.  For several scenarios
-    at once use ``renewal_monte_carlo_scenarios`` (one device dispatch).
+    (``renewal_monte_carlo_device``); ``engine="pallas"`` the float32
+    Kahan-ledger kernel behind the same entry
+    (``kernels.renewal_scan`` — see docs/sweep.md "Precision strategy");
+    ``engine="host"`` runs the float64 oracle (``renewal_compose``) — same
+    histories, same summary reduction, pinned together by
+    tests/test_renewal_device.py and tests/test_renewal_pallas.py.  For
+    several scenarios at once use ``renewal_monte_carlo_scenarios`` (one
+    device dispatch).
 
     ``topology`` (a ``core.topology.Topology`` over the scenario's node
     count) swaps in the correlated shock sampler on either engine — shock
@@ -1704,12 +1836,14 @@ def renewal_monte_carlo(
         mtbf_s = float(np.mean(failures.as_process(process).mean_s()))
     kw = dict(n_runs=n_runs, makespan_s=makespan_s, mtbf_s=mtbf_s,
               max_failures=max_failures)
-    if engine == "device":
-        res = renewal_monte_carlo_device(cfg, key, stats=True, process=process,
-                                         topology=topology, **kw)
+    if engine in ("device", "pallas"):
+        res = renewal_monte_carlo_device(
+            cfg, key, stats=True, process=process, topology=topology,
+            engine="pallas" if engine == "pallas" else "scan", **kw)
         return _summarize_device_scenario(jax.device_get(res), 0, **kw)
     if engine != "host":
-        raise ValueError(f"unknown engine {engine!r} (use 'device' or 'host')")
+        raise ValueError(
+            f"unknown engine {engine!r} (use 'device', 'pallas' or 'host')")
     n_nodes = len(cfg.survivors) + 1
     if topology is None:
         gaps, failed = renewal_failure_gaps(
@@ -1749,6 +1883,7 @@ def renewal_monte_carlo_scenarios(
     max_failures: int = 64,
     process: Optional[failures.FailureProcess] = None,
     topology=None,
+    engine: str = "scan",
 ) -> dict:
     """name -> ``RenewalMonteCarloSummary`` for stacked scenarios from ONE
     fused device dispatch (sampling + scan + Algorithm 1 + reduction).
@@ -1756,7 +1891,8 @@ def renewal_monte_carlo_scenarios(
     Every scenario sees the same sampled failure histories — exactly what
     calling ``renewal_monte_carlo`` per scenario with the same key (and
     ``process``, and ``topology`` for the correlated family) yields, minus
-    S-1 dispatches and all the host round-trips.
+    S-1 dispatches and all the host round-trips.  ``engine="pallas"``
+    swaps in the float32 Kahan-ledger kernel (``kernels.renewal_scan``).
     """
     cfg_list = list(cfgs)
     if process is not None:
@@ -1767,7 +1903,7 @@ def renewal_monte_carlo_scenarios(
     # pay a blocking round-trip per (scenario, field)
     res = jax.device_get(
         renewal_monte_carlo_device(cfg_list, key, stats=True, process=process,
-                                   topology=topology, **kw))
+                                   topology=topology, engine=engine, **kw))
     return {
         cfg.name: _summarize_device_scenario(res, s, **kw)
         for s, cfg in enumerate(cfg_list)

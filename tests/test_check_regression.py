@@ -14,12 +14,15 @@ def _meta(machine=MACHINE):
             "decisions_per_s": 0.0, "derived": machine}
 
 
-def _full_fresh(machine=MACHINE, dps=1e6, speedup=8.0):
+def _full_fresh(machine=MACHINE, dps=1e6, speedup=8.0,
+                pallas_engine="pallas-interpret-cpu"):
     """A fresh record set satisfying every machine-independent gate."""
     return [
         _meta(machine),
         {"name": "failure_sweep/renewal_weibull_k0.7", "us_per_call": 1.0,
          "decisions_per_s": dps, "derived": "x"},
+        {"name": "failure_sweep/renewal_pallas_6x256x32x3", "us_per_call": 1.0,
+         "decisions_per_s": dps, "derived": "x", "engine": pallas_engine},
         {"name": "failure_sweep/renewal_speedup", "us_per_call": 0.0,
          "decisions_per_s": 0.0, "derived": f"{speedup:g}x_device_vs_host"},
         {"name": "failure_sweep/renewal_correlated_device_6x256",
@@ -86,6 +89,33 @@ def test_speedup_ratio_gated_regardless_of_machine(tmp_path):
     bad = _full_fresh(machine="Linux-aarch64-cpu64",
                       speedup=8.0 * (1.0 - cr.THRESHOLD) * 0.9)
     assert _run(tmp_path, bad) == 1
+
+
+def test_engine_mismatch_skips_absolute_row(tmp_path):
+    """Rows whose engine tags differ on the two sides are not comparable
+    (x64 scan vs f32 Pallas vs a TPU pallas run): a 10x decisions/s drop
+    on the re-engined row must NOT fail the gate."""
+    base = _full_fresh(pallas_engine="pallas-interpret-tpu")
+    fresh = _full_fresh(pallas_engine="pallas-interpret-cpu")
+    for r in fresh:
+        if r["name"].startswith("failure_sweep/renewal_pallas"):
+            r["decisions_per_s"] = 1e5          # 10x below baseline
+    assert _run(tmp_path, fresh, base) == 0
+
+
+def test_untagged_rows_still_compared(tmp_path):
+    """The engine skip needs positive evidence on BOTH sides: a tagged
+    fresh row against an untagged baseline (or vice versa) is still
+    gated — legacy baselines keep their protection."""
+    base = _full_fresh()
+    for r in base:
+        if r["name"].startswith("failure_sweep/renewal_pallas"):
+            del r["engine"]                     # legacy untagged baseline
+    fresh = _full_fresh()
+    for r in fresh:
+        if r["name"].startswith("failure_sweep/renewal_pallas"):
+            r["decisions_per_s"] = 1e5
+    assert _run(tmp_path, fresh, base) == 1
 
 
 def test_fresh_collision_rejected(tmp_path):
