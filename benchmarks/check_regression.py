@@ -57,6 +57,11 @@ REQUIRED_ROW_PREFIXES = (
     # the chunked campaign-runner path (repro.campaign.runner) — its
     # absence means the declarative matrix engine no longer dispatches
     "campaign/cells",
+    # the fleet advisory service (repro.fleet): the batched cluster-axis
+    # dispatch and its advisories/s speedup row — absence of either means
+    # the fused multi-cluster path or its baseline comparison broke
+    "fleet_advisor/batched",
+    "fleet_advisor/speedup",
 )
 
 # machine-independent ratio rows gated at THRESHOLD.  Only ratios whose

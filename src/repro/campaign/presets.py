@@ -12,6 +12,12 @@ import numpy as np
 from repro.core import energy_model as em
 from repro.core.scenarios import paper_scenarios
 from repro.campaign import spec
+from repro.fleet.profiles import cluster_scenario
+
+# the fleet-cluster lowering rides the ordinary scenario registry, so
+# `{"scenario": {"base": "fleet_cluster", "n_nodes": 8, ...}}` cells
+# address, hash, and resume like any other scenario spec
+spec.register_scenario("fleet_cluster", cluster_scenario)
 
 # the committed benchmark constants (benchmarks/failure_sweep.py /
 # benchmarks/optimize_policy.py use these same values — parity with the
@@ -158,6 +164,32 @@ def table4_correlated(
     })
 
 
+def fleet(
+    n_runs: int = OPT_N_RUNS,
+    max_failures: int = OPT_MAX_FAILURES,
+    work_d: float = OPT_WORK_D,
+    mtbf_d: float = 14.0,
+) -> spec.CampaignSpec:
+    """Matrix over cluster profiles — node count x power class under the
+    balanced ``fleet_cluster`` lowering (``repro.fleet.ClusterProfile``),
+    the campaign-side view of the fleet-advisory cluster axis
+    (docs/fleet.md): the same heterogeneity the advisor serves online,
+    addressed and stored as an offline experiment matrix."""
+    m = (spec.axis("nodes", [
+            (f"n{n}", {"scenario": {"base": "fleet_cluster", "n_nodes": n}})
+            for n in (4, 8)])
+         * spec.axis("power", [
+            (f"x{s:g}".replace(".", ""),
+             {"scenario": {"power_scale": s}})
+            for s in (0.8, 1.0, 1.25)]))
+    return spec.campaign("fleet", m, base={
+        "process": {"kind": "exponential", "mtbf_s": mtbf_d * 24 * 3600.0},
+        "run": {"n_runs": n_runs, "max_failures": max_failures,
+                "work_s": work_d * 24 * 3600.0},
+        "seed": 0,
+    })
+
+
 def smoke() -> spec.CampaignSpec:
     """A four-cell matrix sized for CI smoke tests and examples: two
     scenarios x {exponential, Weibull} at small run counts."""
@@ -178,4 +210,5 @@ PRESETS = {
     "table4_correlated": table4_correlated,
     "policy_grid": policy_grid,
     "process_shift": process_shift,
+    "fleet": fleet,
 }

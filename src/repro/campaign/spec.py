@@ -60,10 +60,14 @@ from repro.core.simulator import ScenarioConfig
 # scenario families (correlated failures, trace replays, ...) plug in via
 # register_scenario without touching the campaign machinery.
 _SCENARIO_BUILDERS: dict = {}
+_builtins_done = False
 
 
 def register_scenario(name: str, builder: Callable[..., ScenarioConfig]) -> None:
     """Register a scenario builder under ``name`` for use in cell specs."""
+    # builtins first: a custom registration must never pre-populate the dict
+    # and suppress them (the dict-non-empty check used to do exactly that)
+    _ensure_builtin_scenarios()
     _SCENARIO_BUILDERS[name] = builder
 
 
@@ -73,12 +77,13 @@ def scenario_names() -> tuple:
 
 
 def _ensure_builtin_scenarios() -> None:
-    if _SCENARIO_BUILDERS:
+    global _builtins_done
+    if _builtins_done:
         return
+    _builtins_done = True
     for name in paper_scenarios():
-        register_scenario(
-            name, lambda _n=name: paper_scenarios()[_n])
-    register_scenario("sparse_rendezvous", sparse_rendezvous_scenario)
+        _SCENARIO_BUILDERS[name] = (lambda _n=name: paper_scenarios()[_n])
+    _SCENARIO_BUILDERS["sparse_rendezvous"] = sparse_rendezvous_scenario
 
 
 def build_scenario(scenario_spec: Mapping) -> ScenarioConfig:

@@ -80,6 +80,7 @@ __all__ = [
     "Gamma",
     "EmpiricalTrace",
     "as_process",
+    "stack_processes",
     "sample_renewal_gaps",
     "renewal_gaps",
     "failure_clock_ages",
@@ -112,16 +113,21 @@ def _param(x):
     Concrete at construction keeps the sampling transform float32 even when
     traced under ``enable_x64`` (python-float leaves would promote to
     float64 there, breaking the cross-engine bit-identity of histories).
-    Tracers pass through untouched: pytree unflattening re-runs the
-    constructor with traced leaves.
+    Non-numeric leaves pass through untouched: pytree unflattening re-runs
+    the constructor with traced leaves (jit/vmap over process parameters),
+    and transform plumbing (``jax.vmap``'s in_axes resolution) unflattens
+    with opaque placeholder objects.
     """
     if isinstance(x, jax.core.Tracer):
         return x
-    return np.asarray(x, np.float32)
+    try:
+        return np.asarray(x, np.float32)
+    except (TypeError, ValueError):
+        return x
 
 
 def _check_positive(name: str, x) -> None:
-    if isinstance(x, jax.core.Tracer):
+    if not isinstance(x, np.ndarray):
         return
     if np.any(np.asarray(x, np.float64) <= 0.0):
         raise ValueError(f"{name} must be positive, got {x}")
@@ -442,6 +448,43 @@ def as_process(process: Optional[FailureProcess], mtbf_s=None) -> FailureProcess
     if not isinstance(process, FailureProcess):
         raise TypeError(f"not a FailureProcess: {process!r}")
     return process
+
+
+def stack_processes(processes) -> FailureProcess:
+    """Stack same-family processes into ONE process with a leading cluster
+    axis on every parameter leaf.
+
+    This is the failure-process half of the fleet dispatch
+    (``sweep.renewal_monte_carlo_policies`` with a cluster axis): the
+    stacked object is a single pytree the fused program can ``vmap`` over,
+    and each cluster lane then sees exactly the scalar (or per-node)
+    parameters its standalone process carries — so per-cluster histories
+    sampled at a shared key are bit-identical to standalone
+    ``sample_renewal_gaps`` calls on each member (tests/test_fleet.py).
+
+    All members must be the same concrete class (the sampler's control flow
+    — exponential closed form vs conditional-residual scan — is static per
+    dispatch) with identically shaped parameter leaves (``EmpiricalTrace``
+    members need equal trace lengths).  A single-member stack is valid and
+    yields leaves of shape ``(1, ...)``.
+    """
+    procs = [as_process(p) for p in processes]
+    if not procs:
+        raise ValueError("no processes to stack")
+    fam = type(procs[0])
+    if any(type(p) is not fam for p in procs):
+        raise ValueError(
+            "stack_processes needs one process family per dispatch bucket, "
+            f"got {sorted({type(p).__name__ for p in procs})}; route "
+            "mixed-family fleets through per-family buckets (repro.fleet)")
+    try:
+        return jax.tree.map(
+            lambda *ls: np.stack([np.asarray(l, np.float32) for l in ls]),
+            *procs)
+    except ValueError as e:
+        raise ValueError(
+            f"{fam.__name__} parameter leaves do not stack (unequal "
+            f"shapes across clusters): {e}") from e
 
 
 # ---------------------------------------------------------------------------

@@ -63,11 +63,13 @@ __all__ = [
     "PolicyEvalResult",
     "CEMResult",
     "PolicyOptimum",
+    "ClusterSpec",
     "policy_grid",
     "default_policy_table",
     "interval_floor",
     "wall_makespan",
     "policy_inputs",
+    "fleet_policy_inputs",
     "evaluate_policy_grid",
     "pareto_front",
     "knee_point",
@@ -229,6 +231,19 @@ def wall_makespan(work_s, ckpt_interval_s, ckpt_duration_s):
     return work + n * dur
 
 
+def _check_grid(cfg: ScenarioConfig, table: PolicyTable) -> None:
+    """Shared grid preconditions: the renewal-config checks plus the
+    interval floor over the table's shortest interval."""
+    sweep._check_renewal_config(cfg)
+    t_min = float(np.min(table.ckpt_interval))
+    if t_min < interval_floor(cfg):
+        raise ValueError(
+            f"{cfg.name}: grid interval {t_min} below the searchable floor "
+            f"{interval_floor(cfg):.1f} (starting ckpt_age/t_reexec + 1% — "
+            "see interval_floor); start the search from a balanced snapshot "
+            "(scenarios.post_recovery_config) or raise the interval floor")
+
+
 def policy_inputs(cfg: ScenarioConfig, table: PolicyTable) -> sweep.SweepInputs:
     """Stack ONE scenario into per-policy float64 ``SweepInputs``.
 
@@ -240,14 +255,7 @@ def policy_inputs(cfg: ScenarioConfig, table: PolicyTable) -> sweep.SweepInputs:
     grids whose shortest interval is overdue at the start (the sawtooth
     precondition ``sweep_inputs`` enforces per config).
     """
-    sweep._check_renewal_config(cfg)
-    t_min = float(np.min(table.ckpt_interval))
-    if t_min < interval_floor(cfg):
-        raise ValueError(
-            f"{cfg.name}: grid interval {t_min} below the searchable floor "
-            f"{interval_floor(cfg):.1f} (starting ckpt_age/t_reexec + 1% — "
-            "see interval_floor); start the search from a balanced snapshot "
-            "(scenarios.post_recovery_config) or raise the interval floor")
+    _check_grid(cfg, table)
     n_policies = len(table)
     with enable_x64():
         base = sweep.sweep_inputs(cfg, jnp.float64)
@@ -262,6 +270,101 @@ def policy_inputs(cfg: ScenarioConfig, table: PolicyTable) -> sweep.SweepInputs:
             wait_mode=jnp.asarray(table.wait_mode, jnp.int32),
             move_frac=f8(table.move_ahead_frac),
         )
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """One fleet member: a cluster's scenario plus its failure law.
+
+    ``process=None`` falls back to the call-level ``process``/``mtbf_s``;
+    ``work_s`` (optional) overrides the call-level useful work for this
+    cluster.  ``repro.fleet.ClusterProfile.spec()`` builds these from the
+    operator-facing profile description; ``evaluate_policy_grid``/
+    ``optimize_policy`` also accept bare ``(cfg, process)`` tuples.
+    """
+
+    cfg: ScenarioConfig
+    process: Optional[failures.FailureProcess] = None
+    work_s: Optional[float] = None
+
+
+def _as_cluster_spec(c) -> ClusterSpec:
+    if isinstance(c, ClusterSpec):
+        return c
+    if isinstance(c, ScenarioConfig):
+        return ClusterSpec(c)
+    cfg, proc = c
+    return ClusterSpec(cfg, proc)
+
+
+def _np_policy_inputs(cfg: ScenarioConfig, table: PolicyTable) -> sweep.SweepInputs:
+    """Host-numpy twin of ``policy_inputs``: identical values, zero device
+    traffic.  The fleet stacker calls this once per cluster so a 256-wide
+    fleet pays ONE device transfer per leaf instead of thousands of tiny
+    ``jnp.asarray`` round trips (the host-side half of the advisories/s
+    budget).  Per-lane equality with ``policy_inputs`` is pinned by the
+    fleet CRN tests (tests/test_fleet.py)."""
+    _check_grid(cfg, table)
+    n_policies = len(table)
+    f8 = lambda x: np.asarray(x, np.float64)
+    bc = lambda a: np.broadcast_to(f8(a), (n_policies,) + np.shape(f8(a)))
+    pt, sl = cfg.profile.power_table, cfg.profile.sleep
+    return sweep.SweepInputs(
+        exec_rem0=bc([s.exec_to_rendezvous for s in cfg.survivors]),
+        period=bc([s.rendezvous_period for s in cfg.survivors]),
+        age0=bc([s.ckpt_age for s in cfg.survivors]),
+        reexec0=bc(cfg.t_reexec),
+        t_down=bc(cfg.t_down),
+        t_restart=bc(cfg.t_restart),
+        interval=f8(table.ckpt_interval),
+        dur=bc(cfg.ckpt_duration),
+        move_ahead=np.broadcast_to(np.asarray(cfg.move_ahead),
+                                   (n_policies,)),
+        move_frac=f8(table.move_ahead_frac),
+        wait_mode=np.asarray(table.wait_mode, np.int32),
+        mu1=f8(table.mu1),
+        mu2=f8(table.mu2),
+        p_idle_wait=bc(cfg.profile.p_idle_wait),
+        ladder=em.LadderArrays(freq_ghz=bc(pt.freq_ghz), p_comp=bc(pt.p_comp),
+                               beta=bc(pt.beta), p_ckpt=bc(pt.p_ckpt),
+                               gamma=bc(pt.gamma)),
+        sleep=em.SleepArrays(t_go_sleep=bc(sl.t_go_sleep),
+                             t_wakeup=bc(sl.t_wakeup),
+                             p_go_sleep=bc(sl.p_go_sleep),
+                             p_wakeup=bc(sl.p_wakeup),
+                             p_sleep=bc(sl.p_sleep)),
+        peer=tuple(s.peer for s in cfg.survivors),
+    )
+
+
+def fleet_policy_inputs(cfgs: Sequence[ScenarioConfig],
+                        table: PolicyTable) -> sweep.SweepInputs:
+    """Stack MANY scenarios x one policy table into ``(C, P)`` float64
+    ``SweepInputs`` — the fleet dispatch's input pytree.
+
+    Each cluster's slice carries exactly the values ``policy_inputs(cfg_c,
+    table)`` would build (the fleet CRN cross-validation in
+    tests/test_fleet.py depends on that; the stack is assembled on the
+    host and shipped in one transfer per leaf — ``_np_policy_inputs``);
+    the clusters must share survivor count, ladder size, and blocking
+    topology — the static-shape bucket key the serving layer groups
+    requests by (``repro.fleet``).
+    """
+    cfg_list = list(cfgs)
+    if not cfg_list:
+        raise ValueError("no clusters to stack")
+    per = [_np_policy_inputs(cfg, table) for cfg in cfg_list]
+    shapes = {p.exec_rem0.shape for p in per}
+    ladders = {p.ladder.freq_ghz.shape for p in per}
+    peers = {p.peer for p in per}
+    if len(shapes) != 1 or len(ladders) != 1 or len(peers) != 1:
+        raise ValueError(
+            "fleet clusters must share survivor count, ladder size, and "
+            f"blocking topology (got {shapes}, {ladders}, {peers}); "
+            "group heterogeneous node counts into shape buckets "
+            "(repro.fleet.FleetAdvisor)")
+    with enable_x64():
+        return jax.tree.map(lambda *xs: jnp.asarray(np.stack(xs)), *per)
 
 
 # ---------------------------------------------------------------------------
@@ -323,8 +426,108 @@ class PolicyEvalResult:
         )
 
 
+def _policy_eval_from_stats(
+    table: PolicyTable,
+    scenario_name: str,
+    stats,
+    makespans: np.ndarray,
+    work_s: Optional[float],
+    mtbf: float,
+    process_label: str,
+    n_runs: int,
+    max_failures: int,
+) -> PolicyEvalResult:
+    """Host-side reduction of device ``RenewalDeviceStats`` (leading policy
+    axis) into a ``PolicyEvalResult`` — shared by the single-cluster path
+    and each cluster row of the fleet dispatch."""
+    f8 = lambda a: np.asarray(a, np.float64)
+    energy_ref, energy_int = f8(stats.energy_ref), f8(stats.energy_int)
+    saving, end_time = f8(stats.saving), f8(stats.end_time)
+    n_failures = np.asarray(stats.n_failures, np.int64)
+    truncated = np.asarray(stats.truncated, bool)
+    n_points = np.maximum(np.asarray(stats.n_points, np.int64).sum(axis=1), 1)
+    rate = lambda c: np.asarray(c, np.int64).sum(axis=1) / n_points
+    return PolicyEvalResult(
+        table=table,
+        scenario=scenario_name,
+        work_s=None if work_s is None else float(work_s),
+        makespan_s=makespans,
+        mtbf_s=mtbf,
+        process_label=process_label,
+        n_runs=n_runs,
+        max_failures=max_failures,
+        energy_ref=energy_ref,
+        energy_int=energy_int,
+        saving=saving,
+        end_time=end_time,
+        n_failures=n_failures,
+        truncated=truncated,
+        mean_energy_j=energy_int.mean(axis=1),
+        mean_energy_ref_j=energy_ref.mean(axis=1),
+        mean_saving_j=saving.mean(axis=1),
+        mean_makespan_s=end_time.mean(axis=1),
+        mean_failures=n_failures.astype(np.float64).mean(axis=1),
+        truncated_rate=truncated.mean(axis=1),
+        sleep_occupancy=rate(stats.n_sleep),
+        min_freq_rate=rate(stats.n_min_freq),
+        infeasible_rate=rate(stats.n_infeasible),
+    )
+
+
+def _evaluate_policy_grid_fleet(
+    clusters,
+    table: PolicyTable,
+    key: jax.Array,
+    *,
+    work_s,
+    makespan_s,
+    n_runs: int,
+    max_failures: int,
+    mtbf_s,
+    process,
+    engine: str,
+) -> list:
+    """The ``clusters=`` arm of ``evaluate_policy_grid``: one fused
+    ``(C, P)`` dispatch, split back into per-cluster results."""
+    specs = [_as_cluster_spec(c) for c in clusters]
+    procs = [failures.as_process(
+        s.process if s.process is not None else process, mtbf_s)
+        for s in specs]
+    stacked_proc = failures.stack_processes(procs)
+    if (work_s is None) == (makespan_s is None):
+        raise ValueError("give exactly one of work_s or makespan_s")
+    works, rows = [], []
+    for s in specs:
+        if work_s is not None:
+            w = float(work_s if s.work_s is None else s.work_s)
+            rows.append(wall_makespan(w, table.ckpt_interval,
+                                      s.cfg.ckpt_duration))
+            works.append(w)
+        else:
+            if s.work_s is not None:
+                raise ValueError(
+                    "per-cluster work_s overrides need the work_s calling "
+                    "convention, not makespan_s")
+            rows.append(np.full(len(table), float(makespan_s), np.float64))
+            works.append(None)
+    makespans = np.stack(rows)                              # (C, P)
+    stacked = fleet_policy_inputs([s.cfg for s in specs], table)
+    stats = jax.device_get(sweep.renewal_monte_carlo_policies(
+        stacked, key, makespan_s=makespans, n_runs=n_runs,
+        max_failures=max_failures, process=stacked_proc, stats=True,
+        engine=engine))
+    out = []
+    for c, (s, proc_c) in enumerate(zip(specs, procs)):
+        stats_c = jax.tree.map(lambda a, _c=c: a[_c], stats)
+        out.append(_policy_eval_from_stats(
+            table, s.cfg.name, stats_c, makespans[c], works[c],
+            float(np.mean(proc_c.mean_s())), proc_c.label(),
+            n_runs, max_failures))
+    return out
+
+
 def evaluate_policy_grid(
-    cfg: ScenarioConfig,
+    cfg: Optional[ScenarioConfig],
     table: PolicyTable,
     key: jax.Array,
     *,
@@ -335,6 +538,7 @@ def evaluate_policy_grid(
     mtbf_s: Optional[float] = None,
     process: Optional[failures.FailureProcess] = None,
     topology=None,
+    clusters=None,
     engine: str = "scan",
 ) -> PolicyEvalResult:
     """Expected whole-run energy AND makespan for every policy — one fused
@@ -354,7 +558,29 @@ def evaluate_policy_grid(
     scan — the sampler (and so the CRN pairing) is identical; per-policy
     energies differ from the scan engine only by the float32 geometry
     (<= 1e-4 relative, tests/test_renewal_pallas.py).
+
+    ``clusters=`` evaluates the SAME grid for a whole fleet of cluster
+    profiles in one fused ``(C, P)`` dispatch (``cfg`` must then be
+    ``None``): a sequence of ``ClusterSpec`` / ``(cfg, process)`` pairs
+    sharing survivor count and ladder size, each lane sampling its own
+    histories at the same key (the fleet CRN contract — per-cluster rows
+    bit-identical to standalone calls, tests/test_fleet.py).  Returns a
+    LIST of per-cluster ``PolicyEvalResult``; scan engine only, no
+    topology (docs/fleet.md).
     """
+    if clusters is not None:
+        if cfg is not None:
+            raise ValueError(
+                "pass cfg=None with clusters=: each ClusterSpec carries "
+                "its own scenario")
+        if topology is not None:
+            raise ValueError(
+                "cluster-stacked dispatch samples iid per cluster; "
+                "correlated topologies are a single-cluster feature")
+        return _evaluate_policy_grid_fleet(
+            clusters, table, key, work_s=work_s, makespan_s=makespan_s,
+            n_runs=n_runs, max_failures=max_failures, mtbf_s=mtbf_s,
+            process=process, engine=engine)
     if (work_s is None) == (makespan_s is None):
         raise ValueError("give exactly one of work_s or makespan_s")
     proc = failures.as_process(process, mtbf_s)
@@ -369,39 +595,9 @@ def evaluate_policy_grid(
         stacked, key, makespan_s=makespans, n_runs=n_runs,
         max_failures=max_failures, process=proc, stats=True,
         topology=topology, engine=engine))
-
-    f8 = lambda a: np.asarray(a, np.float64)
-    energy_ref, energy_int = f8(stats.energy_ref), f8(stats.energy_int)
-    saving, end_time = f8(stats.saving), f8(stats.end_time)
-    n_failures = np.asarray(stats.n_failures, np.int64)
-    truncated = np.asarray(stats.truncated, bool)
-    n_points = np.maximum(np.asarray(stats.n_points, np.int64).sum(axis=1), 1)
-    rate = lambda c: np.asarray(c, np.int64).sum(axis=1) / n_points
-    return PolicyEvalResult(
-        table=table,
-        scenario=cfg.name,
-        work_s=None if work_s is None else float(work_s),
-        makespan_s=makespans,
-        mtbf_s=mtbf,
-        process_label=proc.label(),
-        n_runs=n_runs,
-        max_failures=max_failures,
-        energy_ref=energy_ref,
-        energy_int=energy_int,
-        saving=saving,
-        end_time=end_time,
-        n_failures=n_failures,
-        truncated=truncated,
-        mean_energy_j=energy_int.mean(axis=1),
-        mean_energy_ref_j=energy_ref.mean(axis=1),
-        mean_saving_j=saving.mean(axis=1),
-        mean_makespan_s=end_time.mean(axis=1),
-        mean_failures=n_failures.astype(np.float64).mean(axis=1),
-        truncated_rate=truncated.mean(axis=1),
-        sleep_occupancy=rate(stats.n_sleep),
-        min_freq_rate=rate(stats.n_min_freq),
-        infeasible_rate=rate(stats.n_infeasible),
-    )
+    return _policy_eval_from_stats(
+        table, cfg.name, stats, makespans, work_s, mtbf, proc.label(),
+        n_runs, max_failures)
 
 
 # ---------------------------------------------------------------------------
@@ -628,8 +824,26 @@ class PolicyOptimum:
     cem: Optional[CEMResult]
 
 
+def _optimum_from_grid(res: PolicyEvalResult) -> PolicyOptimum:
+    """Fold a grid evaluation into its ``PolicyOptimum`` (argmin + Pareto
+    frontier + knee), without a CEM stage."""
+    front = pareto_front(res.mean_energy_j, res.mean_makespan_s)
+    knee = res.policy(knee_point(res.mean_energy_j, res.mean_makespan_s,
+                                 front))
+    return PolicyOptimum(
+        scenario=res.scenario,
+        process_label=res.process_label,
+        mtbf_s=res.mtbf_s,
+        grid=res,
+        best=res.policy(res.best),
+        pareto=front,
+        knee=knee,
+        cem=None,
+    )
+
+
 def optimize_policy(
-    cfg: ScenarioConfig,
+    cfg: Optional[ScenarioConfig],
     key: Optional[jax.Array] = None,
     *,
     table: Optional[PolicyTable] = None,
@@ -641,6 +855,7 @@ def optimize_policy(
     refine: bool = False,
     cem_kw: Optional[dict] = None,
     topology=None,
+    clusters=None,
     engine: str = "scan",
 ) -> PolicyOptimum:
     """Tune the policy knobs for one scenario under one failure process.
@@ -655,9 +870,40 @@ def optimize_policy(
     the float32 Kahan-ledger kernel (the CEM refinement stage keeps the
     scan engine — it re-evaluates single policies through
     ``evaluate_policy_grid``'s default).
+
+    ``clusters=`` (``cfg=None``) tunes a whole fleet in ONE fused program:
+    a sequence of ``ClusterSpec`` / ``(cfg, process)`` pairs sharing
+    survivor count and ladder size; returns a LIST of per-cluster
+    ``PolicyOptimum`` whose rows are bit-identical (CRN, same key) to
+    standalone ``optimize_policy`` calls per cluster.  A shared ``table``
+    is required across the fleet — default: ``default_policy_table`` of
+    the first cluster at its process MTBF.  ``refine=True`` is a
+    single-cluster feature and raises with ``clusters=``.
     """
     if key is None:
         key = jax.random.PRNGKey(0)
+    if clusters is not None:
+        if cfg is not None:
+            raise ValueError("pass cfg=None with clusters=: each "
+                             "ClusterSpec carries its own scenario")
+        if refine:
+            raise ValueError(
+                "refine=True is a single-cluster feature; CEM-refine the "
+                "per-cluster grid optima individually if needed")
+        specs = [_as_cluster_spec(c) for c in clusters]
+        if not specs:
+            raise ValueError("no clusters to optimize")
+        if table is None:
+            p0 = failures.as_process(
+                specs[0].process if specs[0].process is not None else process,
+                14 * 24 * 3600.0 if mtbf_s is None else mtbf_s)
+            table = default_policy_table(specs[0].cfg,
+                                         float(np.mean(p0.mean_s())))
+        results = evaluate_policy_grid(
+            None, table, key, work_s=work_s, n_runs=n_runs,
+            max_failures=max_failures, mtbf_s=mtbf_s, process=process,
+            topology=topology, clusters=specs, engine=engine)
+        return [_optimum_from_grid(res) for res in results]
     proc = failures.as_process(process, 14 * 24 * 3600.0 if mtbf_s is None
                                else mtbf_s)
     mtbf = float(np.mean(proc.mean_s()))

@@ -1271,10 +1271,43 @@ _renewal_device_jit = jax.jit(
     _renewal_device_core, static_argnames=("stats",))
 _renewal_mc_jit = jax.jit(
     _renewal_mc_core, static_argnames=("n_runs", "max_failures", "stats"))
+def _renewal_fleet_mc_core(inp: SweepInputs, key: jax.Array, makespan_s,
+                           process, n_runs: int, max_failures: int):
+    """The cluster-axis analog of ``_renewal_policy_mc_core``: ``inp``
+    carries leading ``(C, P)`` axes (clusters x policies — build with
+    ``core.optimize.fleet_policy_inputs``), ``makespan_s`` is ``(C, P)``,
+    and ``process`` is a same-family stack with leading ``(C,)`` parameter
+    leaves (``failures.stack_processes``).
+
+    Each cluster lane re-samples its OWN failure histories at the SAME key
+    through its own process parameters — exactly the draws a standalone
+    ``_renewal_policy_mc_core`` call on that cluster would make — then runs
+    the policy-vmapped composition on them.  That is the fleet CRN
+    contract: per-cluster rows of the fused dispatch are bit-identical to
+    standalone per-cluster calls at the same key, so fleet answers are
+    independent of which other clusters share the batch and batch padding
+    is provably inert (tests/test_fleet.py pins both).  Stats-only: this
+    is the advisory hot path, and the per-epoch diagnostic view belongs to
+    the single-cluster engines it cross-validates against.
+    """
+    n_nodes = inp.period.shape[-1] + 1
+
+    def one_cluster(inp_c, makespan_c, proc_c):
+        gaps32, failed = failures.sample_renewal_gaps(
+            proc_c, key, n_runs, max_failures, n_nodes)
+        out = _renewal_policy_core(inp_c, gaps32.astype(jnp.float64),
+                                   makespan_c, stats=True, felled=None)
+        return _attach_failed_counts(out, failed, n_nodes)
+
+    return jax.vmap(one_cluster)(inp, makespan_s, process)
+
+
 _renewal_policy_jit = jax.jit(
     _renewal_policy_core, static_argnames=("stats",))
 _renewal_policy_mc_jit = jax.jit(
     _renewal_policy_mc_core, static_argnames=("n_runs", "max_failures", "stats"))
+_renewal_fleet_mc_jit = jax.jit(
+    _renewal_fleet_mc_core, static_argnames=("n_runs", "max_failures"))
 
 
 # ---------------------------------------------------------------------------
@@ -1412,8 +1445,52 @@ def renewal_monte_carlo_policies(
     sampler and therefore the same CRN property (the float32 casts of the
     float64 policy-stacked leaves are bit-exact).  See docs/sweep.md
     ("Precision strategy").
+
+    **Cluster axis (fleet dispatch).**  A ``stacked`` whose knob leaves
+    carry TWO leading axes ``(C, P)`` (``core.optimize.
+    fleet_policy_inputs``) evaluates C heterogeneous cluster profiles x P
+    policies in the same single program: ``makespan_s`` must then be
+    ``(C, P)`` and ``process`` a same-family stack with leading ``(C,)``
+    parameter leaves (``failures.stack_processes``).  Every cluster lane
+    samples its own histories at the SAME key through its own parameters,
+    so per-cluster rows are bit-identical to standalone per-cluster calls
+    (the fleet CRN contract, tests/test_fleet.py) and answers are
+    independent of the batch they shipped in — which is what makes
+    request-batch padding inert (docs/fleet.md).  The cluster axis is
+    scan-engine, stats-only, iid-sampler territory for now (``engine=
+    "pallas"``, ``stats=False``, and ``topology`` all raise).
     """
     proc = failures.as_process(process, mtbf_s)
+    if stacked.interval.ndim == 2:
+        if engine != "scan":
+            raise ValueError(
+                "the cluster axis runs on the scan engine only (the Pallas "
+                "kernel's grid is policies x runs; see ROADMAP)")
+        if not stats:
+            raise ValueError(
+                "cluster-stacked dispatch is the stats-only advisory hot "
+                "path; use per-cluster calls for per-epoch diagnostics")
+        if topology is not None:
+            raise ValueError(
+                "cluster-stacked dispatch samples iid per cluster; "
+                "correlated topologies are a single-cluster feature")
+        n_clusters = stacked.interval.shape[0]
+        leaves = jax.tree.leaves(proc)
+        if not leaves or any(
+                np.ndim(l) < 1 or np.shape(l)[0] != n_clusters for l in leaves):
+            raise ValueError(
+                f"cluster-stacked dispatch needs a process stacked over the "
+                f"{n_clusters} cluster lanes (failures.stack_processes)")
+        with enable_x64():
+            makespan = jnp.asarray(np.asarray(makespan_s, np.float64))
+            if makespan.shape != stacked.interval.shape:
+                raise ValueError(
+                    f"fleet makespan_s must be (C, P) = "
+                    f"{stacked.interval.shape}, got {makespan.shape}")
+            out = _renewal_fleet_mc_jit(
+                stacked, key, makespan, proc,
+                n_runs=n_runs, max_failures=max_failures)
+            return _wrap_device_stats(out)
     if engine == "pallas":
         if not stats:
             raise ValueError(

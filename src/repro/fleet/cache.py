@@ -1,0 +1,124 @@
+"""Compiled-program memoization for the fleet dispatch.
+
+``jax.jit`` already caches compilations per input shape, but a serving
+process needs three things the implicit cache does not give it: a BOUND
+on resident executables (every (clusters, policies, nodes) shape triple
+is a separate XLA program — an unbounded advisor would accrete them
+forever), OBSERVABILITY (did this request hit a compiled program or pay a
+trace?), and real EVICTION (dropping a ``jax.jit`` wrapper releases its
+underlying executables; entries in the global cache cannot be dropped
+selectively).
+
+``DispatchCache`` therefore holds one fresh ``jax.jit`` instance per
+*bucket key* — the static-shape tuple the serving layer quantizes
+requests to (survivor count, process family, policy-grid size, padded
+cluster count) — in a bounded LRU.  A repeat fleet shape reuses its
+entry's compiled program (no retrace: pinned by the per-entry trace
+counter, tests/test_fleet.py); a new node-count bucket is a miss; beyond
+``max_entries`` the least-recently-used program is dropped.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Callable, Hashable, Optional, Sequence
+
+import jax
+
+__all__ = ["DispatchCache", "CacheStats"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheStats:
+    """Counters snapshot: bucket-level hits/misses/evictions plus the total
+    number of traces actually paid (across live AND evicted entries —
+    re-tracing after an eviction shows up here)."""
+
+    hits: int
+    misses: int
+    evictions: int
+    traces: int
+    entries: int
+
+
+class _Entry:
+    __slots__ = ("call", "traces")
+
+    def __init__(self, fn: Callable, compile_fn: Callable):
+        self.traces = [0]           # mutable cell: bumped inside the trace
+
+        def counted(*args, __traces=self.traces, **kw):
+            __traces[0] += 1        # host side effect — runs once per trace
+            return fn(*args, **kw)
+
+        self.call = compile_fn(counted)
+
+
+class DispatchCache:
+    """Bounded LRU of per-bucket ``jax.jit`` instances around one function.
+
+    ``get(bucket_key)`` returns the bucket's jitted callable, creating (and
+    possibly evicting) as needed.  The *caller* owns the bucket-key
+    discipline: every call through one entry must use the padded shapes
+    that key encodes, so the entry never holds more than one executable.
+
+    ``compile`` swaps the per-entry compiler — the sharded advisor path
+    passes a ``jax.pmap`` factory so device-parallel programs get the same
+    bound/counters (default: ``jax.jit`` with ``static_argnames``).
+    """
+
+    def __init__(self, fn: Callable, *, static_argnames: Sequence[str] = (),
+                 max_entries: int = 8, compile: Optional[Callable] = None):
+        if max_entries < 1:
+            raise ValueError(f"max_entries must be >= 1, got {max_entries}")
+        self._fn = fn
+        self._compile = compile if compile is not None else (
+            lambda f, _names=tuple(static_argnames):
+                jax.jit(f, static_argnames=_names))
+        self._max = max_entries
+        self._entries: "OrderedDict[Hashable, _Entry]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self._evicted_traces = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, bucket_key: Hashable) -> bool:
+        return bucket_key in self._entries
+
+    def get(self, bucket_key: Hashable) -> Callable:
+        entry = self._entries.get(bucket_key)
+        if entry is not None:
+            self.hits += 1
+            self._entries.move_to_end(bucket_key)
+            return entry.call
+        self.misses += 1
+        entry = _Entry(self._fn, self._compile)
+        self._entries[bucket_key] = entry
+        while len(self._entries) > self._max:
+            _, dropped = self._entries.popitem(last=False)
+            self._evicted_traces += dropped.traces[0]
+            self.evictions += 1
+        return entry.call
+
+    def trace_count(self, bucket_key: Hashable) -> int:
+        """Traces paid by the LIVE entry for ``bucket_key`` (0 if absent).
+        The no-retrace property tests pin this: two dispatches at one fleet
+        shape must leave it at 1."""
+        entry = self._entries.get(bucket_key)
+        return entry.traces[0] if entry is not None else 0
+
+    def stats(self) -> CacheStats:
+        live = sum(e.traces[0] for e in self._entries.values())
+        return CacheStats(hits=self.hits, misses=self.misses,
+                          evictions=self.evictions,
+                          traces=live + self._evicted_traces,
+                          entries=len(self._entries))
+
+    def clear(self) -> None:
+        for _, dropped in self._entries.items():
+            self._evicted_traces += dropped.traces[0]
+        self.evictions += len(self._entries)
+        self._entries.clear()

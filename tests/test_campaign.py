@@ -150,6 +150,38 @@ def test_policy_grid_preset_matches_optimize_grid_order():
         assert cell.config["policy"]["wait_mode"] == int(pol["wait_mode"])
 
 
+def test_fleet_preset_addresses_cluster_scenarios():
+    """The fleet preset's cells lower through the ``fleet_cluster``
+    registry entry — node-count x power-class matrix over the same
+    balanced snapshot the advisor serves (repro.fleet)."""
+    from repro.fleet import cluster_scenario
+    camp = presets.fleet()
+    assert len(camp.cells) == 6                 # 2 node counts x 3 power classes
+    for cell in camp.cells:
+        sc = cell.config["scenario"]
+        assert sc["base"] == "fleet_cluster"
+        cfg = spec.build_scenario(sc)
+        ref = cluster_scenario(
+            **{k: v for k, v in sc.items() if k != "base"})
+        assert cfg.name == ref.name
+        assert cfg.survivors == ref.survivors
+        assert cfg.profile.p_base == ref.profile.p_base
+        assert len(cfg.survivors) == sc["n_nodes"] - 1
+
+
+def test_custom_registration_never_suppresses_builtins(monkeypatch):
+    """Registering a custom scenario into a FRESH registry must not
+    pre-populate the dict and suppress the builtin scenarios (the old
+    dict-non-empty check did exactly that)."""
+    monkeypatch.setattr(spec, "_SCENARIO_BUILDERS", {})
+    monkeypatch.setattr(spec, "_builtins_done", False)
+    spec.register_scenario("custom_probe", lambda: None)
+    names = spec.scenario_names()
+    assert "custom_probe" in names
+    assert "sparse_rendezvous" in names         # builtins survived
+    assert SCEN_A in names
+
+
 # ---------------------------------------------------------------------------
 # content-hash contract
 # ---------------------------------------------------------------------------

@@ -33,6 +33,11 @@ def _full_fresh(machine=MACHINE, dps=1e6, speedup=8.0,
          "decisions_per_s": 0.0, "derived": "x"},
         {"name": "campaign/cells_42x64x64x3", "us_per_call": 1.0,
          "decisions_per_s": dps, "derived": "x"},
+        {"name": "fleet_advisor/batched_256x14x32", "us_per_call": 1.0,
+         "decisions_per_s": dps, "derived": "x", "engine": "scan-x64"},
+        {"name": "fleet_advisor/speedup", "us_per_call": 0.0,
+         "decisions_per_s": 0.0,
+         "derived": "1.5x_batched_vs_per_cluster_loop"},
     ]
 
 
@@ -62,6 +67,16 @@ def test_required_row_missing_fails(tmp_path):
     fresh = [r for r in _full_fresh()
              if not r["name"].startswith("campaign/")]
     assert _run(tmp_path, fresh) == 1
+
+
+def test_fleet_rows_required(tmp_path):
+    """Dropping either fleet row (batched dispatch or its speedup ratio)
+    must fail the presence gate — the advisor's fused path is load-bearing."""
+    for prefix in ("fleet_advisor/batched", "fleet_advisor/speedup"):
+        fresh = [r for r in _full_fresh()
+                 if not r["name"].startswith(prefix)]
+        assert _run(tmp_path, fresh) == 1, prefix
+    assert _run(tmp_path, _full_fresh()) == 0
 
 
 def test_all_required_prefixes_are_gated(tmp_path):

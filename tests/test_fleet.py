@@ -1,0 +1,333 @@
+"""Fleet-advisory tests: the cluster axis never changes any answer.
+
+The fleet layer's entire contract is mechanical and testable:
+
+  * **fleet CRN bitwise identity** — every cluster row of the fused
+    ``(C, P)`` dispatch must equal a standalone ``optimize_policy`` /
+    ``evaluate_policy_grid`` call for that cluster alone at the same key,
+    bit for bit (each lane re-samples its OWN histories at the shared
+    key) — for both failure families.  This is the PR-5 CRN contract
+    extended over the cluster axis: batching is a throughput decision,
+    never an accuracy one.
+  * **padding inertness** — padding a batch up to a shape bucket by
+    repeating the last request must leave the real rows bit-identical to
+    the unpadded dispatch (vmap lanes are independent).
+  * **scatter order** — a shuffled multi-bucket request stream comes back
+    in submit order, each answer belonging to its own profile.
+  * **memoization** — repeat fleet shapes are pure cache hits (no
+    retrace, probed by trace counters); new static shapes miss; the LRU
+    bound holds and evicts.
+
+Plus the acceptance bar: a 256-cluster heterogeneous fleet answered by
+ONE compiled program, spot-checked bit-identical to standalone calls.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro import fleet
+from repro.core import energy_model as em
+from repro.core import failures as F
+from repro.core import optimize as O
+
+KEY = jax.random.PRNGKey(11)
+N_RUNS = 8
+MAX_FAILURES = 6
+KW = dict(n_runs=N_RUNS, max_failures=MAX_FAILURES)
+
+
+def _table() -> O.PolicyTable:
+    return O.policy_grid(
+        ckpt_interval=[3600.0, 7200.0, 14400.0],
+        mu1=[6.0],
+        wait_mode=[em.WaitMode.ACTIVE, em.WaitMode.IDLE],
+    )
+
+
+def _fleet(n=4, *, family_frac=0.0, seed=2, node_buckets=(4,)):
+    return fleet.synthetic_fleet(n, seed=seed, node_buckets=node_buckets,
+                                 weibull_frac=family_frac)
+
+
+def _solo(profile, table):
+    """The reference answer: tune this cluster alone at the same key."""
+    return O.optimize_policy(
+        profile.scenario(), KEY, table=table,
+        process=profile.failure_process(), work_s=profile.work_s, **KW)
+
+
+def _assert_grids_bitwise(got: O.PolicyEvalResult, ref: O.PolicyEvalResult,
+                          label: str):
+    for field in ("energy_ref", "energy_int", "saving", "end_time",
+                  "n_failures", "mean_energy_j", "mean_makespan_s",
+                  "makespan_s"):
+        np.testing.assert_array_equal(
+            getattr(got, field), getattr(ref, field),
+            err_msg=f"{label} field {field}")
+
+
+# ---------------------------------------------------------------------------
+# fleet CRN: per-cluster rows == standalone calls, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family_frac", [0.0, 1.0],
+                         ids=["exponential", "weibull"])
+def test_fleet_rows_bit_identical_to_standalone(family_frac):
+    """Each cluster row of ``optimize_policy(clusters=)`` equals tuning
+    that cluster alone — grids, argmin, and knee — for both families."""
+    table = _table()
+    profiles = _fleet(3, family_frac=family_frac)
+    batch = O.optimize_policy(None, KEY, table=table,
+                              clusters=[p.spec() for p in profiles], **KW)
+    assert len(batch) == len(profiles)
+    for p, opt in zip(profiles, batch):
+        ref = _solo(p, table)
+        _assert_grids_bitwise(opt.grid, ref.grid, p.name)
+        assert opt.best == ref.best, p.name
+        assert opt.knee == ref.knee, p.name
+        np.testing.assert_array_equal(opt.pareto, ref.pareto)
+
+
+def test_evaluate_policy_grid_clusters_matches_single():
+    """The grid-evaluator arm: ``clusters=`` rows == single-cfg calls with
+    the same per-cluster process and work."""
+    table = _table()
+    profiles = _fleet(3, family_frac=1.0, seed=5)
+    rows = O.evaluate_policy_grid(
+        None, table, KEY, work_s=6 * 24 * 3600.0,
+        clusters=[(p.scenario(), p.failure_process()) for p in profiles],
+        **KW)
+    for p, got in zip(profiles, rows):
+        ref = O.evaluate_policy_grid(
+            p.scenario(), table, KEY, work_s=6 * 24 * 3600.0,
+            process=p.failure_process(), **KW)
+        _assert_grids_bitwise(got, ref, p.name)
+
+
+def test_fleet_policy_inputs_lanes_match_policy_inputs():
+    """The host-numpy stacker: each cluster slice of the stacked pytree
+    carries exactly what ``policy_inputs`` builds for that cfg alone."""
+    table = _table()
+    cfgs = [p.scenario() for p in _fleet(3, seed=9)]
+    stacked = O.fleet_policy_inputs(cfgs, table)
+    for c, cfg in enumerate(cfgs):
+        solo = O.policy_inputs(cfg, table)
+        jax.tree.map(
+            lambda s, r, _c=c: np.testing.assert_array_equal(
+                np.asarray(s)[_c], np.asarray(r)),
+            stacked, solo)
+
+
+# ---------------------------------------------------------------------------
+# padding inertness and scatter order
+# ---------------------------------------------------------------------------
+
+def test_padding_is_inert():
+    """Forcing 5 requests through an 8-wide bucket (3 padded lanes) gives
+    the same bits as the exact-fit dispatch."""
+    table = _table()
+    profiles = _fleet(5, seed=4)
+    exact = fleet.FleetAdvisor(table, key=KEY, buckets=(5,), **KW)
+    padded = fleet.FleetAdvisor(table, key=KEY, buckets=(8,), **KW)
+    for a, b in zip(exact.advise(profiles), padded.advise(profiles)):
+        _assert_grids_bitwise(b.optimum.grid, a.optimum.grid, a.profile.name)
+        assert a.best == b.best and a.knee == b.knee
+
+
+def test_scatter_returns_submit_order():
+    """A shuffled multi-bucket stream: answers come back in submit order,
+    each bit-identical to that profile advised on its own."""
+    table = _table()
+    profiles = fleet.synthetic_fleet(7, seed=6, node_buckets=(4, 8),
+                                     weibull_frac=0.5)
+    order = [3, 0, 6, 2, 5, 1, 4]
+    shuffled = [profiles[i] for i in order]
+    advisor = fleet.FleetAdvisor(table, key=KEY, **KW)
+    advisories = advisor.advise(shuffled)
+    assert [a.request_id for a in advisories] == list(range(len(shuffled)))
+    assert len({p.bucket_key() for p in shuffled}) > 1
+    solo = fleet.FleetAdvisor(table, key=KEY, **KW)
+    for a, p in zip(advisories, shuffled):
+        assert a.profile is p
+        (alone,) = solo.advise([p])
+        _assert_grids_bitwise(a.optimum.grid, alone.optimum.grid, p.name)
+
+
+def test_empty_and_singleton_flush():
+    # no table: the advisor builds the default grid around its MTBF anchor
+    advisor = fleet.FleetAdvisor(key=KEY, **KW)
+    assert advisor.flush() == []
+    profile = fleet.ClusterProfile()
+    rid = advisor.submit(profile)
+    assert rid == 0
+    (a,) = advisor.flush()
+    assert a.profile is profile
+    assert advisor.flush() == []        # queue drained
+
+
+def test_sharded_path_matches_unsharded():
+    """``shard=True`` splits the cluster axis over the host's devices via
+    pmap with a broadcast key — answers must stay bit-identical to the
+    unsharded dispatch (on one device: a 1-lane pmap)."""
+    table = _table()
+    profiles = _fleet(3, seed=8)
+    plain = fleet.FleetAdvisor(table, key=KEY, **KW).advise(profiles)
+    sharded_adv = fleet.FleetAdvisor(table, key=KEY, shard=True, **KW)
+    for a, b in zip(plain, sharded_adv.advise(profiles)):
+        _assert_grids_bitwise(b.optimum.grid, a.optimum.grid, a.profile.name)
+        assert a.best == b.best and a.knee == b.knee
+    # the pmap program lives in its own cache but shares the counters
+    stats = sharded_adv.cache_stats()
+    assert stats.misses == 1 and stats.traces == 1
+
+
+# ---------------------------------------------------------------------------
+# acceptance bar: 256 heterogeneous clusters, one compiled program
+# ---------------------------------------------------------------------------
+
+def test_256_cluster_fleet_one_program():
+    table = _table()
+    profiles = _fleet(256, seed=0)
+    advisor = fleet.FleetAdvisor(table, key=KEY, **KW)
+    advisories = advisor.advise(profiles)
+    assert len(advisories) == 256
+    stats = advisor.cache_stats()
+    assert stats.misses == 1 and stats.traces == 1 and stats.entries == 1
+    # heterogeneity made it through: MTBFs differ, so do some answers
+    assert len({a.profile.mtbf_s for a in advisories}) == 256
+    for c in (0, 101, 255):
+        ref = _solo(profiles[c], table)
+        _assert_grids_bitwise(advisories[c].optimum.grid, ref.grid, f"c{c}")
+        assert advisories[c].best == ref.best
+
+
+# ---------------------------------------------------------------------------
+# memoization: hits, misses, eviction — probed by trace counters
+# ---------------------------------------------------------------------------
+
+def test_repeat_fleet_shape_never_retraces():
+    table = _table()
+    advisor = fleet.FleetAdvisor(table, key=KEY, **KW)
+    advisor.advise(_fleet(3, seed=1))
+    first = advisor.cache_stats()
+    assert first.misses == 1 and first.traces == 1
+    # a DIFFERENT fleet padding into the same 4-wide bucket: new values,
+    # same static shapes — must reuse the compiled program untouched
+    advisor.advise(_fleet(4, seed=2))
+    again = advisor.cache_stats()
+    assert again.traces == first.traces     # no retrace
+    assert again.hits == first.hits + 1
+    assert again.misses == first.misses
+
+
+def test_new_node_count_bucket_misses():
+    advisor = fleet.FleetAdvisor(_table(), key=KEY, **KW)
+    advisor.advise(_fleet(2, node_buckets=(4,)))
+    advisor.advise(_fleet(2, node_buckets=(8,)))
+    stats = advisor.cache_stats()
+    assert stats.misses == 2 and stats.entries == 2
+
+
+def test_dispatch_cache_lru_eviction():
+    calls = []
+    cache = fleet.DispatchCache(lambda x: x + 1, max_entries=2,
+                                compile=lambda f: (calls.append(1), f)[1])
+    for k in ("a", "b", "a", "c"):          # c evicts b (a was refreshed)
+        cache.get(k)(0)
+    assert len(cache) == 2
+    assert "b" not in cache and "a" in cache and "c" in cache
+    st = cache.stats()
+    assert (st.hits, st.misses, st.evictions) == (1, 3, 1)
+    cache.get("b")(0)                       # re-entry is a fresh miss
+    assert cache.stats().misses == 4
+    with pytest.raises(ValueError):
+        fleet.DispatchCache(lambda x: x, max_entries=0)
+
+
+def test_dispatch_cache_clear():
+    cache = fleet.DispatchCache(lambda x: x + 1, max_entries=4)
+    cache.get("a")(jax.numpy.ones(2))
+    cache.get("b")
+    cache.clear()
+    assert len(cache) == 0 and "a" not in cache
+    st = cache.stats()
+    assert st.evictions == 2 and st.entries == 0
+    assert st.traces == 1               # the paid trace survives the clear
+
+
+def test_dispatch_cache_trace_counting():
+    cache = fleet.DispatchCache(lambda x: x * 2, static_argnames=())
+    fn = cache.get("k")
+    assert cache.trace_count("k") == 0      # compiled lazily
+    fn(jax.numpy.ones(3)); fn(jax.numpy.ones(3))
+    assert cache.trace_count("k") == 1      # second call hit the jit cache
+    fn(jax.numpy.ones(4))                   # new shape retraces
+    assert cache.trace_count("k") == 2
+    assert cache.stats().traces == 2
+
+
+# ---------------------------------------------------------------------------
+# error paths: the cluster axis refuses silent misuse
+# ---------------------------------------------------------------------------
+
+def test_clusters_reject_cfg_and_refine():
+    spec = fleet.ClusterProfile().spec()
+    with pytest.raises(ValueError, match="cfg=None"):
+        O.optimize_policy(fleet.ClusterProfile().scenario(), KEY,
+                          clusters=[spec], **KW)
+    with pytest.raises(ValueError, match="single-cluster"):
+        O.optimize_policy(None, KEY, clusters=[spec], refine=True, **KW)
+    with pytest.raises(ValueError, match="no clusters"):
+        O.optimize_policy(None, KEY, clusters=[], **KW)
+
+
+def test_clusters_reject_topology_and_mixed_families():
+    table = _table()
+    exp = fleet.ClusterProfile(family="exponential").spec()
+    wb = fleet.ClusterProfile(family="weibull").spec()
+    with pytest.raises(ValueError, match="single-cluster"):
+        O.evaluate_policy_grid(None, table, KEY, work_s=1e5,
+                               clusters=[exp], topology=object(), **KW)
+    with pytest.raises(ValueError, match="family"):
+        O.evaluate_policy_grid(None, table, KEY, work_s=1e5,
+                               clusters=[exp, wb], **KW)
+
+
+def test_clusters_reject_shape_mismatch_and_bad_makespan():
+    table = _table()
+    n4 = fleet.ClusterProfile(n_nodes=4).spec()
+    n8 = fleet.ClusterProfile(n_nodes=8).spec()
+    with pytest.raises(ValueError, match="survivor count"):
+        O.evaluate_policy_grid(None, table, KEY, work_s=1e5,
+                               clusters=[n4, n8], **KW)
+    with pytest.raises(ValueError, match="exactly one"):
+        O.evaluate_policy_grid(None, table, KEY, clusters=[n4], **KW)
+    with pytest.raises(ValueError, match="work_s"):
+        O.evaluate_policy_grid(None, table, KEY, makespan_s=1e5,
+                               clusters=[n4], **KW)
+
+
+def test_cluster_scenario_builder():
+    """The campaign-registry lowering reuses the profile's balanced
+    snapshot: node/power axes address it as an ordinary scenario."""
+    cfg = fleet.cluster_scenario(n_nodes=8, power_scale=0.8)
+    assert cfg.name == "fleet_n8_x0.8"
+    assert len(cfg.survivors) == 7
+    ref = fleet.ClusterProfile(name=cfg.name, n_nodes=8,
+                               power_scale=0.8).scenario()
+    assert cfg.survivors == ref.survivors
+    assert cfg.ckpt_duration == ref.ckpt_duration
+    assert cfg.profile.p_base == ref.profile.p_base
+    np.testing.assert_array_equal(cfg.profile.power_table.p_comp,
+                                  ref.profile.power_table.p_comp)
+
+
+def test_profile_validation():
+    with pytest.raises(ValueError, match="nodes"):
+        fleet.ClusterProfile(n_nodes=1)
+    with pytest.raises(ValueError, match="family"):
+        fleet.ClusterProfile(family="lognormal")
+    with pytest.raises(ValueError, match="positive"):
+        fleet.ClusterProfile(mtbf_s=-1.0)
+    with pytest.raises(ValueError, match=">= 1"):
+        fleet.synthetic_fleet(0)

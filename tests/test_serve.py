@@ -1,0 +1,146 @@
+"""Serving-layer tests: the shape-bucket batching primitives and the
+decode-serving CLI that consumes them.
+
+``launch.batching`` owns the pad/scatter bookkeeping for BOTH serving
+drivers (token decode and the fleet policy advisor), so its contract is
+pinned here once: bucket selection (including the sharded multiple-of
+constraint and the beyond-largest-bucket fallback), edge-padding for
+arrays and lists, group/scatter as exact inverses on any request stream,
+and the refusal paths (empty batches, oversized batches, results that
+still carry padding).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.launch.batching import (
+    DEFAULT_BUCKETS,
+    bucket_size,
+    group_indices,
+    pad_rows,
+    scatter,
+)
+
+
+# ---------------------------------------------------------------------------
+# bucket_size
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,expect", [
+    (1, 1), (2, 2), (3, 4), (5, 8), (8, 8), (9, 16), (100, 128),
+    (1000, 1024), (1024, 1024),
+])
+def test_bucket_size_default_buckets(n, expect):
+    assert bucket_size(n) == expect
+
+
+def test_bucket_size_multiple_of_skips_indivisible_buckets():
+    # 3 requests over 2 shards: bucket 4 is the smallest divisible fit
+    assert bucket_size(3, multiple_of=2) == 4
+    assert bucket_size(1, multiple_of=2) == 2
+    # a 3-way shard skips every power of two beyond... all of them: the
+    # fallback produces the next exact multiple instead of erroring
+    assert bucket_size(5, buckets=(4, 8), multiple_of=3) == 6
+
+
+def test_bucket_size_overflow_falls_back_to_exact_multiple():
+    assert bucket_size(2000) == 2000
+    assert bucket_size(2001, multiple_of=2) == 2002
+
+
+def test_bucket_size_unsorted_buckets():
+    assert bucket_size(3, buckets=(16, 4, 8)) == 4
+
+
+def test_bucket_size_rejects_nonpositive():
+    with pytest.raises(ValueError, match="batch size"):
+        bucket_size(0)
+    with pytest.raises(ValueError, match="multiple_of"):
+        bucket_size(4, multiple_of=0)
+
+
+# ---------------------------------------------------------------------------
+# pad_rows
+# ---------------------------------------------------------------------------
+
+def test_pad_rows_array_repeats_last_row():
+    rows = np.arange(6).reshape(3, 2)
+    out = pad_rows(rows, 5)
+    assert out.shape == (5, 2)
+    np.testing.assert_array_equal(out[:3], rows)
+    np.testing.assert_array_equal(out[3], rows[-1])
+    np.testing.assert_array_equal(out[4], rows[-1])
+
+
+def test_pad_rows_list_and_noop():
+    assert pad_rows(["a", "b"], 4) == ["a", "b", "b", "b"]
+    rows = np.ones((4, 2))
+    assert pad_rows(rows, 4) is rows        # exact fit: untouched
+    lst = ["x"]
+    assert pad_rows(lst, 1) is lst
+
+
+def test_pad_rows_refusals():
+    with pytest.raises(ValueError, match="empty"):
+        pad_rows([], 4)
+    with pytest.raises(ValueError, match="does not fit"):
+        pad_rows([1, 2, 3], 2)
+
+
+# ---------------------------------------------------------------------------
+# group_indices / scatter: exact inverses
+# ---------------------------------------------------------------------------
+
+def test_group_indices_preserves_order():
+    groups = group_indices(["b", "a", "b", "c", "a"])
+    assert list(groups) == ["b", "a", "c"]          # first-seen group order
+    assert groups == {"b": [0, 2], "a": [1, 4], "c": [3]}
+
+
+def test_scatter_round_trip():
+    keys = ["b", "a", "b", "c", "a", "b"]
+    groups = group_indices(keys)
+    # each group answers its own requests in within-group order
+    results = {k: [f"{k}{j}" for j in range(len(idx))]
+               for k, idx in groups.items()}
+    out = scatter(groups, results)
+    assert out == ["b0", "a0", "b1", "c0", "a1", "b2"]
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.sampled_from("abcd"), min_size=1, max_size=32))
+def test_scatter_inverts_group_indices(keys):
+    """Property: scattering each request's own index through the group
+    round trip reproduces the identity permutation for ANY stream."""
+    groups = group_indices(keys)
+    results = {k: list(idx) for k, idx in groups.items()}
+    assert scatter(groups, results) == list(range(len(keys)))
+
+
+def test_scatter_rejects_padded_results():
+    groups = group_indices(["a", "a"])
+    with pytest.raises(ValueError, match="sliced off"):
+        scatter(groups, {"a": [1, 2, 3]})       # padding leaked through
+
+
+def test_scatter_empty_stream():
+    assert scatter({}, {}) == []
+
+
+# ---------------------------------------------------------------------------
+# the decode-serving CLI rides the same helpers
+# ---------------------------------------------------------------------------
+
+def test_serve_cli_pads_to_bucket_and_slices_back(monkeypatch, capsys):
+    """End-to-end: a 3-prompt batch is served through the 4-wide bucket
+    and reports exactly 3 rows of real tokens."""
+    from repro.launch import serve
+
+    monkeypatch.setattr("sys.argv", [
+        "serve", "--arch", "mamba2-370m", "--batch", "3",
+        "--prompt-len", "4", "--gen", "4"])
+    serve.main()
+    out = capsys.readouterr().out
+    assert "(bucket 4)" in out
+    assert "3x4 tokens" in out
